@@ -1,0 +1,39 @@
+"""Shared benchmark fixtures: one generated log corpus + derived artifacts."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.core import EventDictionary, SessionSequences, sessionize
+from repro.data import generate, LogGenConfig
+
+
+@functools.lru_cache(maxsize=1)
+def corpus(n_users: int = 2000, seed: int = 42):
+    """Generated log + dictionary + sessionized sequences (cached)."""
+    log = generate(LogGenConfig(n_users=n_users, seed=seed))
+    b = log.batch
+    d = EventDictionary.build(b.table, b.name_id)
+    codes = np.asarray(d.encode_ids(b.name_id))
+    s = sessionize(b.user_id, b.session_id, b.timestamp, codes,
+                   b.ip.astype(np.int64), max_sessions=len(b), max_len=2048)
+    seqs = SessionSequences.from_sessionized(s)
+    return dict(log=log, batch=b, dictionary=d, codes=codes, seqs=seqs)
+
+
+def timeit(fn, *, repeats: int = 5, warmup: int = 1) -> float:
+    """Median microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

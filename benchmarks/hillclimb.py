@@ -1,0 +1,82 @@
+"""Perf hillclimbing driver: evaluate a config variant's roofline terms.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.hillclimb --arch qwen2-72b \
+      --shape train_4k --tag sp_u2 \
+      --overrides '{"seq_parallel": true, "microbatches": 2}'
+
+Runs the same reduced/unrolled cost compiles as benchmarks.roofline (with
+the overrides merged), extrapolates, prints the three terms next to the
+recorded baseline, and (with --full) also compiles the full scanned config
+for the memory proof. Results land in results/hillclimb/<arch>__<shape>__
+<tag>.json — the EXPERIMENTS.md §Perf log cites these files.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from .roofline import (extrapolate_cell, model_flops, analytic_min_bytes,
+                       CHIPS, PEAK_FLOPS, HBM_BW, LINK_BW, RESULTS)
+
+HC_DIR = os.path.join(RESULTS, "hillclimb")
+
+
+def evaluate(arch: str, shape: str, overrides: dict, tag: str,
+             run_full: bool = False) -> dict:
+    from repro.launch.shapes import cell_config
+    cfg_ovr = {k: v for k, v in overrides.items()
+               if not k.startswith("mesh_")}
+    cfg = cell_config(arch, shape, cfg_ovr)
+    ext = extrapolate_cell(arch, shape, cfg, extra_overrides=overrides,
+                           tag_prefix=f"hc_{tag}_")
+    compute_s = ext["flops"] / PEAK_FLOPS
+    coll_s = ext["coll_bytes"] / LINK_BW
+    memory_s = analytic_min_bytes(cfg, shape) / HBM_BW
+    mf = model_flops(cfg, shape)
+    bound = max(compute_s, memory_s, coll_s)
+    out = dict(arch=arch, shape=shape, tag=tag, overrides=overrides,
+               compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+               memory_hlo_s=ext["bytes"] / HBM_BW,
+               mfu_bound=(mf / (CHIPS * PEAK_FLOPS)) / bound,
+               useful_ratio=mf / (ext["flops"] * CHIPS))
+    if run_full:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", "single", "--mode", "full",
+               "--overrides", json.dumps(overrides), "--tag", f"hc_{tag}",
+               "--force"]
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(os.path.dirname(HC_DIR), "..",
+                                           "src"))
+        subprocess.run(cmd, check=True, stdout=subprocess.DEVNULL,
+                       stderr=subprocess.DEVNULL, env=env)
+        p = os.path.join(RESULTS, "dryrun",
+                         f"{arch}__{shape}__single__full__hc_{tag}.json")
+        full = json.load(open(p))
+        out["memory_per_dev"] = full["memory"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--overrides", default="{}")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(HC_DIR, exist_ok=True)
+    res = evaluate(args.arch, args.shape, json.loads(args.overrides),
+                   args.tag, run_full=args.full)
+    path = os.path.join(HC_DIR,
+                        f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    print(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

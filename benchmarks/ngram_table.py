@@ -1,0 +1,29 @@
+"""§5.4 user modeling: n-gram language models over session sequences.
+Cross entropy by order quantifies the 'temporal signal' in user behaviour
+(the paper's PubMed-style analysis), plus top activity collocations."""
+from __future__ import annotations
+
+from repro.analytics import NGramLM, top_collocations
+from .common import corpus, timeit, row
+
+
+def run() -> list[str]:
+    c = corpus()
+    d, seqs = c["dictionary"], c["seqs"]
+    out = []
+    prev = None
+    for n in (1, 2, 3):
+        lm = NGramLM.fit(seqs, n, d.alphabet_size)
+        us = timeit(lambda lm=lm: lm.cross_entropy(seqs), repeats=2)
+        h = lm.cross_entropy(seqs)
+        gain = f" signal_vs_{n-1}gram={prev - h:+.2f}bits" if prev else ""
+        out.append(row(f"ngram_{n}_cross_entropy", us,
+                       f"H={h:.3f}bits/event ppl={2**h:.1f}{gain}"))
+        prev = h
+    us = timeit(lambda: top_collocations(seqs, d, k=5), repeats=2)
+    top = top_collocations(seqs, d, k=1)
+    first = top[0] if top else {}
+    out.append(row("collocations_g2", us,
+                   f"top={first.get('first','-')}->{first.get('second','-')}"
+                   f" g2={first.get('g2', 0)}"))
+    return out

@@ -1,0 +1,45 @@
+"""Pipeline-stage throughput: the vectorized JAX group-by vs the Pig-style
+Python oracle, dictionary build, and the LM batch pipeline feed rate."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EventDictionary, sessionize
+from repro.core.oracle import sessionize_oracle
+from repro.data import SessionBatchPipeline, PipelineConfig
+from .common import corpus, timeit, row
+
+
+def run() -> list[str]:
+    c = corpus()
+    b, codes, seqs = c["batch"], c["codes"], c["seqs"]
+    n = len(b)
+
+    us_jax = timeit(lambda: sessionize(
+        b.user_id, b.session_id, b.timestamp, codes, b.ip.astype(np.int64),
+        max_sessions=n, max_len=2048).symbols.block_until_ready(), repeats=3)
+    us_py = timeit(lambda: sessionize_oracle(
+        b.user_id, b.session_id, b.timestamp, codes), repeats=1, warmup=0)
+
+    us_dict = timeit(lambda: EventDictionary.build(b.table, b.name_id))
+
+    pipe = SessionBatchPipeline(seqs, PipelineConfig(seq_len=512,
+                                                     global_batch=8))
+    nb = pipe.batches_per_epoch()
+
+    def one_epoch():
+        for _ in pipe.epoch(0):
+            pass
+
+    us_pipe = timeit(one_epoch, repeats=2)
+    toks = nb * 8 * 512
+    return [
+        row("sessionize_jax", us_jax,
+            f"{n / (us_jax / 1e6) / 1e6:.2f}M events/s"),
+        row("sessionize_python_oracle", us_py,
+            f"{n / (us_py / 1e6) / 1e6:.2f}M events/s "
+            f"(jax speedup={us_py / us_jax:.1f}x)"),
+        row("dictionary_build", us_dict, f"alphabet from {n} events"),
+        row("lm_batch_pipeline_epoch", us_pipe,
+            f"{toks / (us_pipe / 1e6) / 1e6:.2f}M tokens/s prefetch=2"),
+    ]

@@ -1,0 +1,73 @@
+"""Render EXPERIMENTS.md sections from the dry-run/roofline artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+RESULTS = os.path.join(REPO, "results")
+HBM_LIMIT = 16e9  # v5e
+
+
+def load_full():
+    out = {}
+    for p in glob.glob(os.path.join(RESULTS, "dryrun", "*__full.json")):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def dryrun_table() -> str:
+    full = load_full()
+    lines = ["| arch | shape | mesh | compile | args+out GB/dev | temp GB/dev | fits 16GB |",
+             "|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(full.items()):
+        if r.get("skipped"):
+            lines.append(f"| {arch} | {shape} | {mesh} | SKIP (sub-quadratic"
+                         f" attention required) | — | — | — |")
+            continue
+        if r.get("error"):
+            lines.append(f"| {arch} | {shape} | {mesh} | ERROR | — | — | — |")
+            continue
+        m = r["memory"]
+        args = m["argument_bytes"] / 1e9
+        temp = m["temp_bytes"] / 1e9
+        tot = args + temp
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {r['compile_s']:.1f}s "
+            f"| {args:.2f} | {temp:.2f} "
+            f"| {'YES' if tot <= HBM_LIMIT/1e9 else f'NO ({tot:.1f}GB)'} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    rows = json.load(open(os.path.join(RESULTS, "roofline.json")))
+    lines = ["| arch | shape | compute s | memory s (floor) | mem s (HLO ub) "
+             "| collective s | dominant | 6ND/HLO | roofline-bound MFU |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | | |")
+            continue
+        if r.get("error"):
+            lines.append(f"| {r['arch']} | {r['shape']} | ERR | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']*1e3:.2f}ms "
+            f"| {r['memory_s']*1e3:.2f}ms | {r['memory_hlo_s']*1e3:.2f}ms "
+            f"| {r['collective_s']*1e3:.2f}ms | {r['dominant'].replace('_s','')} "
+            f"| {r['useful_ratio']:.2f} | {r['mfu_bound']*100:.1f}% |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run (full configs, scanned, both meshes)\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single-pod 16x16, per-device terms)\n")
+        print(roofline_table())

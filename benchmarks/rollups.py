@@ -1,0 +1,24 @@
+"""§3.2 Oink roll-up aggregations: five progressively-wildcarded count
+tables computed daily over all events, no developer intervention."""
+from __future__ import annotations
+
+from repro.analytics import rollup_counts
+from .common import corpus, timeit, row
+
+
+def run() -> list[str]:
+    c = corpus()
+    b, d = c["batch"], c["dictionary"]
+
+    def all_rollups():
+        return rollup_counts(b.name_id, d)
+
+    us = timeit(all_rollups)
+    tables = all_rollups()
+    sizes = "/".join(str(len(t)) for t in tables)
+    total = sum(tables[0].values())
+    return [
+        row("oink_rollups_5_schemas", us,
+            f"groups_per_level={sizes} events={total} "
+            f"events_per_s={total / (us / 1e6):.0f}"),
+    ]

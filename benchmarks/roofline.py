@@ -1,0 +1,291 @@
+"""Roofline derivation from the dry-run artifacts.
+
+For every supported (arch x shape) cell on the single-pod mesh:
+
+1. read the FULL-mode result (memory proof; compile success);
+2. run COST-mode variants — reduced-depth, fully *unrolled* programs whose
+   cost_analysis and HLO collective bytes are exact — and extrapolate the
+   (bi)linear cost model to production depth/microbatches;
+3. emit the three roofline terms:
+
+     compute_s    = FLOPs / (chips * 197e12)          bf16 peak, TPU v5e
+     memory_s     = bytes / (chips * 819e9)           HBM bandwidth
+     collective_s = coll_bytes_per_chip / 4.5e10      ~link BW (ICI, 1 link
+                                                      active per phase,
+                                                      conservative)
+
+plus MODEL_FLOPS = 6*N*D (dense; N_active for MoE) and the useful-compute
+ratio. Results -> results/roofline.json + a markdown table for
+EXPERIMENTS.md.
+
+Cost-model terms per family (train):
+  dense/moe/ssm:  f(L, u) = A + B*L + C*u + D*L*u        L in {2,4}, u in {1,2}
+  hybrid:         groups g in {1,2} (+ tail point L=6g+1), same u terms
+  vlm:            groups g in {1,2}, same u terms
+  encdec:         f(enc, dec) = A + B*enc + C*dec        (u = 1)
+Serve shapes drop the u terms.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+RESULTS = os.path.join(REPO, "results")
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+CHIPS = 256                      # single-pod roofline
+PEAK_FLOPS = 197e12              # bf16 / chip
+HBM_BW = 819e9                   # B/s / chip
+LINK_BW = 45e9                   # B/s effective per chip (ICI)
+
+SHAPE_TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+                "decode_32k": 128, "long_500k": 1}
+
+
+def _run(arch, shape, overrides, tag, force=False):
+    path = os.path.join(DRYRUN, f"{arch}__{shape}__single__cost__{tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("error"):
+            return r
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", "single", "--mode", "cost",
+           "--overrides", json.dumps(overrides), "--tag", tag]
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    subprocess.run(cmd, cwd=REPO, env=env, check=True,
+                   stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    with open(path) as f:
+        return json.load(f)
+
+
+def _metrics(r):
+    coll = r.get("collectives", {})
+    return np.array([r["flops"] or 0.0, r["bytes_accessed"] or 0.0,
+                     float(coll.get("total", 0))])
+
+
+def _fit_eval(points, targets):
+    """points: list of (feature_vec, metrics[3]); solve least squares and
+    evaluate at ``targets`` feature vec."""
+    X = np.array([p[0] for p in points], float)
+    Y = np.array([p[1] for p in points], float)
+    coef, *_ = np.linalg.lstsq(X, Y, rcond=None)
+    out = np.asarray(targets, float) @ coef
+    return np.maximum(out, 0.0)
+
+
+def extrapolate_cell(arch: str, shape: str, cfg, extra_overrides=None,
+                     tag_prefix: str = "") -> dict:
+    """Returns dict(flops, bytes, coll_bytes) extrapolated to full config."""
+    fam = cfg.family
+    train = shape == "train_4k"
+    mus = (1, 2) if train and cfg.microbatches > 1 else (1,)
+    base_ovr = dict(scan_layers=False, unroll_microbatches=True,
+                    **(extra_overrides or {}))
+
+    def feat_train(l, u):
+        return [1.0, l, u, l * u] if len(mus) > 1 else [1.0, l]
+
+    if fam in ("dense", "moe", "ssm"):
+        ls = (2, 4)
+        pts = []
+        for l, u in itertools.product(ls, mus):
+            r = _run(arch, shape, {**base_ovr, "num_layers": l,
+                                   "microbatches": u}, tag_prefix + f"L{l}u{u}")
+            pts.append((feat_train(l, u), _metrics(r)))
+        tgt = feat_train(cfg.num_layers, cfg.microbatches)
+        out = _fit_eval(pts, tgt)
+
+    elif fam == "hybrid":
+        ae = cfg.attn_every
+        pts, tail_pts = [], {}
+        for g, u in itertools.product((1, 2), mus):
+            r = _run(arch, shape, {**base_ovr, "num_layers": ae * g,
+                                   "microbatches": u}, tag_prefix + f"G{g}u{u}")
+            pts.append((feat_train(g, u), _metrics(r)))
+        # tail coefficient: one extra mamba layer beyond full groups
+        for u in mus:
+            r12 = _run(arch, shape, {**base_ovr, "num_layers": 2 * ae,
+                                     "microbatches": u}, tag_prefix + f"G2u{u}")
+            r13 = _run(arch, shape, {**base_ovr, "num_layers": 2 * ae + 1,
+                                     "microbatches": u}, tag_prefix + f"G2t1u{u}")
+            tail_pts[u] = _metrics(r13) - _metrics(r12)
+        n_groups = cfg.num_layers // ae
+        tail_n = cfg.num_layers - n_groups * ae
+        out = _fit_eval(pts, feat_train(n_groups, cfg.microbatches))
+        if tail_n:
+            if len(mus) > 1:
+                tA = 2 * tail_pts[1] - tail_pts[2]
+                tC = tail_pts[2] - tail_pts[1]
+                out = out + tail_n * (tA + cfg.microbatches * tC)
+            else:
+                out = out + tail_n * tail_pts[1]
+
+    elif fam == "vlm":
+        ce = cfg.cross_attn_every
+        pts = []
+        for g, u in itertools.product((1, 2), mus):
+            r = _run(arch, shape, {**base_ovr, "num_layers": ce * g,
+                                   "microbatches": u}, tag_prefix + f"G{g}u{u}")
+            pts.append((feat_train(g, u), _metrics(r)))
+        out = _fit_eval(pts, feat_train(cfg.num_layers // ce,
+                                        cfg.microbatches))
+
+    elif fam == "encdec":
+        pts = []
+        for enc, dec in ((2, 2), (4, 2), (2, 4)):
+            r = _run(arch, shape, {**base_ovr, "encoder_layers": enc,
+                                   "num_layers": dec}, tag_prefix + f"e{enc}d{dec}")
+            pts.append(([1.0, enc, dec], _metrics(r)))
+        out = _fit_eval(pts, [1.0, cfg.encoder_layers, cfg.num_layers])
+    else:
+        raise ValueError(fam)
+
+    return dict(flops=float(out[0]), bytes=float(out[1]),
+                coll_bytes=float(out[2]))
+
+
+def model_flops(cfg, shape: str) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = active params."""
+    n = cfg.active_param_count()
+    tokens = SHAPE_TOKENS[shape]
+    mult = 6.0 if shape == "train_4k" else 2.0
+    return mult * n * tokens
+
+
+def analytic_min_bytes(cfg, shape: str) -> float:
+    """Fusion-ideal per-device HBM traffic floor (documented model):
+
+    train:  AdamW state r/w (6 x 4B x P/chips) + bf16 weight reads per
+            microbatch pass (3 passes x 2B x P/TP — the FSDP-gathered copy
+            is re-read each microbatch) + carry traffic + logits;
+    decode: one bf16 read of all (active) weights + the KV cache/state;
+    prefill: weight reads + cache write + carry traffic.
+
+    The HLO 'bytes accessed' is the no-fusion UPPER bound; real HBM traffic
+    lies between. Dominance below uses this floor (conservative for the
+    memory term, so compute/collective dominance is never understated).
+    """
+    chips = CHIPS
+    tp = 16
+    p_total = cfg.param_count()
+    p_active = cfg.active_param_count()
+    d, L, v = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    if shape == "train_4k":
+        tokens_dev = 4096 * 256 // chips * tp  # per data shard
+        opt = 6 * 4 * p_total / chips
+        wts = 3 * cfg.microbatches * 2 * (p_total / tp)
+        carry = tokens_dev * d * 2 * 6 * L / tp  # seq-replicated over model
+        logits = 3 * 2 * tokens_dev * (v / tp)
+        return opt + wts + carry + logits
+    if shape == "prefill_32k":
+        tokens_dev = 32768 * 32 // chips * tp
+        wts = 2 * (p_total / tp)
+        cache = 2 * 2 * L * cfg.num_kv_heads * cfg.resolved_head_dim * \
+            tokens_dev / tp
+        carry = tokens_dev * d * 2 * 4 * L / tp
+        return wts + cache + carry
+    # decode: weights once + cache read once
+    batch = SHAPE_TOKENS[shape]
+    wts = 2 * p_active / chips
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    ctx = 32768 if shape == "decode_32k" else 524288
+    if cfg.family == "ssm":
+        cache = 4 * L * batch * cfg.ssm_nheads * cfg.ssm_state * \
+            cfg.ssm_headdim / chips * 2  # read+write f32 state
+    elif cfg.family == "hybrid":
+        n_groups = L // max(cfg.attn_every, 1)
+        cache = (4 * L * batch * cfg.ssm_nheads * cfg.ssm_state *
+                 cfg.ssm_headdim * 2
+                 + 2 * 2 * n_groups * batch * kv * hd * ctx) / chips
+    else:
+        cache = 2 * 2 * L * batch * kv * hd * ctx / chips
+    return wts + cache
+
+
+def roofline_row(arch: str, shape: str) -> dict | None:
+    from repro.launch.shapes import cell_supported, cell_config
+    ok, reason = cell_supported(arch, shape)
+    if not ok:
+        return dict(arch=arch, shape=shape, skipped=True, reason=reason)
+    full_path = os.path.join(DRYRUN, f"{arch}__{shape}__single__full.json")
+    if not os.path.exists(full_path):
+        return None
+    with open(full_path) as f:
+        full = json.load(f)
+    if full.get("error"):
+        return dict(arch=arch, shape=shape, error=True)
+    cfg = cell_config(arch, shape)
+    ext = extrapolate_cell(arch, shape, cfg)
+
+    # cost/bytes from HLO are GLOBAL (whole-program over all devices)?
+    # No: with SPMD the compiled module is the per-device program, so
+    # cost_analysis flops/bytes are PER DEVICE. Totals = x CHIPS.
+    flops_per_dev = ext["flops"]
+    bytes_per_dev = ext["bytes"]
+    coll_per_dev = ext["coll_bytes"]
+
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_hlo_s = bytes_per_dev / HBM_BW          # no-fusion UPPER bound
+    mem_floor = analytic_min_bytes(cfg, shape)
+    memory_s = mem_floor / HBM_BW                  # fusion-ideal floor
+    coll_s = coll_per_dev / LINK_BW
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_per_dev * CHIPS
+    terms = dict(compute_s=compute_s, memory_s=memory_s, collective_s=coll_s)
+    dominant = max(terms, key=terms.get)
+    bound_s = max(compute_s, memory_s, coll_s)
+    return dict(
+        arch=arch, shape=shape, skipped=False,
+        flops_per_dev=flops_per_dev, bytes_per_dev=bytes_per_dev,
+        mem_floor_bytes_per_dev=mem_floor,
+        coll_bytes_per_dev=coll_per_dev,
+        **terms, memory_hlo_s=memory_hlo_s, dominant=dominant,
+        model_flops=mf, hlo_flops_total=hlo_total,
+        useful_ratio=(mf / hlo_total) if hlo_total else 0.0,
+        mfu_bound=(mf / (CHIPS * PEAK_FLOPS)) / bound_s if bound_s else 0.0,
+        memory_per_dev=full["memory"],
+    )
+
+
+def main(argv=None):
+    import argparse
+    from repro.configs import ASSIGNED
+    from repro.launch.shapes import SHAPES
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            row = roofline_row(arch, shape)
+            if row is None:
+                print(f"[missing full dry-run] {arch} {shape}", file=sys.stderr)
+                continue
+            rows.append(row)
+            if not row.get("skipped") and not row.get("error"):
+                print(f"{arch:22s} {shape:12s} comp={row['compute_s']*1e3:8.2f}ms "
+                      f"mem={row['memory_s']*1e3:8.2f}ms coll={row['collective_s']*1e3:8.2f}ms "
+                      f"dom={row['dominant']:12s} useful={row['useful_ratio']:.2f} "
+                      f"mfu_bound={row['mfu_bound']*100:5.1f}%", flush=True)
+            else:
+                print(f"{arch:22s} {shape:12s} SKIP/{row.get('reason','err')[:60]}",
+                      flush=True)
+    with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark driver — one section per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  compression     — §4.2 "about fifty times smaller" claim
+  query_speed     — §4.2/§5 sequences-vs-raw query latency
+  rollups         — §3.2 Oink five-schema aggregations
+  ngram_table     — §5.4 temporal-signal table + collocations
+  pipeline_tput   — substrate throughput (vectorized vs Pig-style oracle)
+
+Roofline derivation lives in benchmarks/roofline.py (reads the dry-run
+artifacts; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import compression, query_speed, rollups, ngram_table, \
+        pipeline_tput
+    print("name,us_per_call,derived")
+    for mod in (compression, query_speed, rollups, ngram_table,
+                pipeline_tput):
+        for line in mod.run():
+            print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

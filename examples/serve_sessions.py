@@ -1,0 +1,57 @@
+"""Serving example: batched next-event prediction over live session
+prefixes with a KV-cached decode loop — plus the same model served from an
+SSM (Mamba2) backbone to show the unified ModelApi.
+
+Run:  PYTHONPATH=src python examples/serve_sessions.py
+"""
+import numpy as np
+import jax
+
+from repro.core import EventDictionary, SessionSequences, sessionize
+from repro.data import (generate, LogGenConfig, SessionBatchPipeline,
+                        PipelineConfig, lm_vocab_size, NUM_SPECIALS)
+from repro.models import ModelConfig, get_model
+from repro.serve import Server, ServeConfig
+
+
+def main():
+    log = generate(LogGenConfig(n_users=600, seed=9))
+    b = log.batch
+    d = EventDictionary.build(b.table, b.name_id)
+    codes = np.asarray(d.encode_ids(b.name_id))
+    s = sessionize(b.user_id, b.session_id, b.timestamp, codes,
+                   b.ip.astype(np.int64), max_sessions=len(b), max_len=1024)
+    seqs = SessionSequences.from_sessionized(s)
+    vocab = lm_vocab_size(d.alphabet_size)
+    pipe = SessionBatchPipeline(seqs, PipelineConfig(seq_len=64,
+                                                     global_batch=8))
+    prompts = pipe.batch_at(0, 0)["tokens"][:8, :32]
+
+    for family, cfg in [
+        ("dense", ModelConfig(name="dense-srv", family="dense", num_layers=2,
+                              d_model=128, num_heads=4, num_kv_heads=2,
+                              d_ff=256, vocab_size=vocab, dtype="float32",
+                              remat="none", max_cache_len=64)),
+        ("ssm", ModelConfig(name="ssm-srv", family="ssm", num_layers=2,
+                            d_model=128, vocab_size=vocab, d_ff=0,
+                            ssm_state=16, ssm_headdim=32, ssm_chunk=16,
+                            dtype="float32", remat="none")),
+    ]:
+        api = get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        srv = Server(api, params, ServeConfig(max_new_tokens=8,
+                                              temperature=0.8, seed=1))
+        gen = srv.generate(prompts)
+        print(f"=== {family} backbone ({cfg.name}) ===")
+        for i in range(2):
+            names = [d.name_of(t - NUM_SPECIALS)
+                     if t >= NUM_SPECIALS else "<s>" for t in gen[i]]
+            print(f"  req {i}: " + " -> ".join(n.split(":")[-1]
+                                               for n in names))
+    print("\n(untrained weights — the decode plumbing, batching and KV/SSM "
+          "state management are what this example exercises; see "
+          "train_behavior_lm.py for a trained model)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Activity collocations (paper §5.4): PMI and Dunning log-likelihood.
+
+"hot dog" for user behaviour: pairs of adjacent events that co-occur far
+more than independence predicts — candidate 'interesting patterns of user
+activity'. Computed from the sort-based bigram/unigram count tables.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.dictionary import EventDictionary
+from ..core.sequences import SessionSequences
+from .ngram import ngram_counts, unpack_key
+
+
+def _xlogx(x: np.ndarray) -> np.ndarray:
+    return np.where(x > 0, x * np.log(np.maximum(x, 1e-300)), 0.0)
+
+
+@dataclass
+class Collocation:
+    first: int
+    second: int
+    count: int
+    pmi: float
+    g2: float
+
+
+def collocations(seqs: SessionSequences, alphabet_size: int,
+                 min_count: int = 5) -> list[Collocation]:
+    """All adjacent-pair collocations with PMI and G² scores."""
+    bi_keys, bi_counts = ngram_counts(seqs, 2, alphabet_size)
+    uni_keys, uni_counts = ngram_counts(seqs, 1, alphabet_size)
+    uni = np.zeros(alphabet_size, np.int64)
+    uni[uni_keys.astype(np.int64)] = uni_counts
+    n = int(bi_counts.sum())  # total bigram windows
+    if n == 0:
+        return []
+
+    sel = bi_counts >= min_count
+    keys, k11 = bi_keys[sel], bi_counts[sel].astype(np.float64)
+    first = (keys // alphabet_size).astype(np.int64)
+    second = (keys % alphabet_size).astype(np.int64)
+    c1 = uni[first].astype(np.float64)   # occurrences of first symbol
+    c2 = uni[second].astype(np.float64)
+
+    # PMI (Church & Hanks): log2( P(xy) / (P(x) P(y)) )
+    pmi = np.log2(np.maximum(k11 * n / np.maximum(c1 * c2, 1.0), 1e-300))
+
+    # Dunning G² over the 2x2 contingency table of (first?, second?).
+    k12 = np.maximum(c1 - k11, 0.0)
+    k21 = np.maximum(c2 - k11, 0.0)
+    k22 = np.maximum(n - k11 - k12 - k21, 0.0)
+    row1, row2 = k11 + k12, k21 + k22
+    col1, col2 = k11 + k21, k12 + k22
+    g2 = 2.0 * (_xlogx(k11) + _xlogx(k12) + _xlogx(k21) + _xlogx(k22)
+                - _xlogx(row1) - _xlogx(row2) - _xlogx(col1) - _xlogx(col2)
+                + _xlogx(np.full_like(k11, n)))
+
+    order = np.argsort(-g2)
+    return [Collocation(int(first[i]), int(second[i]), int(k11[i]),
+                        float(pmi[i]), float(g2[i])) for i in order]
+
+
+def top_collocations(seqs: SessionSequences, dictionary: EventDictionary,
+                     k: int = 20, min_count: int = 5):
+    """Human-readable top-k by G² (ranked as Dunning recommends — PMI
+    over-weights rare pairs)."""
+    out = []
+    for c in collocations(seqs, dictionary.alphabet_size, min_count)[:k]:
+        out.append(dict(
+            first=dictionary.name_of(c.first), second=dictionary.name_of(c.second),
+            count=c.count, pmi=round(c.pmi, 3), g2=round(c.g2, 2)))
+    return out

@@ -1,0 +1,77 @@
+"""BirdBrain-style summary statistics (paper §5.1).
+
+Daily session counts over time, drill-down by client type (first level of
+the event namespace) and by bucketed session duration — the dashboard feeds,
+computed from the compact session sequences rather than raw logs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.dictionary import EventDictionary
+from ..core.namespace import parse
+from ..core.sequences import SessionSequences
+
+# (label, upper bound seconds); paper buckets session durations.
+DURATION_BUCKETS = (
+    ("<1m", 60), ("1-5m", 300), ("5-15m", 900), ("15-30m", 1800),
+    ("30m-1h", 3600), (">1h", np.inf),
+)
+
+_MS_PER_DAY = 86_400_000
+
+
+def client_of_codes(dictionary: EventDictionary) -> tuple[np.ndarray, list[str]]:
+    """code -> client id (first namespace level), plus client names."""
+    clients: dict[str, int] = {}
+    client_of = np.empty(dictionary.alphabet_size, np.int32)
+    for code in range(dictionary.alphabet_size):
+        c = parse(dictionary.name_of(code)).client
+        client_of[code] = clients.setdefault(c, len(clients))
+    return client_of, list(clients)
+
+
+@dataclass
+class SummaryReport:
+    sessions_per_day: dict[int, int]
+    users_per_day: dict[int, int]
+    sessions_by_client: dict[str, int]
+    duration_histogram: dict[str, int]
+    totals: dict = field(default_factory=dict)
+
+
+def summarize(seqs: SessionSequences,
+              dictionary: EventDictionary | None = None) -> SummaryReport:
+    days = (np.asarray(seqs.start_ts) // _MS_PER_DAY).astype(np.int64)
+    uniq_days, day_counts = np.unique(days, return_counts=True)
+    sessions_per_day = {int(d): int(c) for d, c in zip(uniq_days, day_counts)}
+
+    users_per_day = {}
+    users = np.asarray(seqs.user_id)
+    for d in uniq_days:
+        users_per_day[int(d)] = int(len(np.unique(users[days == d])))
+
+    by_client: dict[str, int] = {}
+    if dictionary is not None and len(seqs):
+        client_of, client_names = client_of_codes(dictionary)
+        first_sym = np.clip(seqs.symbols[:, 0], 0, dictionary.alphabet_size - 1)
+        cids = client_of[first_sym]
+        for cid, cnt in zip(*np.unique(cids, return_counts=True)):
+            by_client[client_names[int(cid)]] = int(cnt)
+
+    dur = np.asarray(seqs.duration_s, np.float64)
+    hist: dict[str, int] = {}
+    lo = -np.inf
+    for label, hi in DURATION_BUCKETS:
+        hist[label] = int(((dur > lo) & (dur <= hi)).sum())
+        lo = hi
+
+    return SummaryReport(
+        sessions_per_day=sessions_per_day,
+        users_per_day=users_per_day,
+        sessions_by_client=by_client,
+        duration_histogram=hist,
+        totals=seqs.summary(),
+    )

@@ -1,0 +1,28 @@
+"""Assigned architecture configs (--arch <id>) + the paper's behaviour LM."""
+from . import (stablelm_3b, qwen2_72b, llama3_8b, qwen3_0_6b, mamba2_370m,
+               dbrx_132b, olmoe_1b_7b, zamba2_7b, whisper_tiny,
+               llama32_vision_11b, paper)
+
+REGISTRY = {
+    "stablelm-3b": stablelm_3b,
+    "qwen2-72b": qwen2_72b,
+    "llama3-8b": llama3_8b,
+    "qwen3-0.6b": qwen3_0_6b,
+    "mamba2-370m": mamba2_370m,
+    "dbrx-132b": dbrx_132b,
+    "olmoe-1b-7b": olmoe_1b_7b,
+    "zamba2-7b": zamba2_7b,
+    "whisper-tiny": whisper_tiny,
+    "llama-3.2-vision-11b": llama32_vision_11b,
+    "behavior-lm-100m": paper,
+}
+
+ASSIGNED = [k for k in REGISTRY if k != "behavior-lm-100m"]
+
+
+def full_config(arch: str):
+    return REGISTRY[arch].FULL
+
+
+def smoke_config(arch: str):
+    return REGISTRY[arch].SMOKE

@@ -1,0 +1,17 @@
+"""dbrx-132b [moe] 40L d_model=6144 48H (GQA kv=8) d_ff=10752
+vocab=100352, MoE 16e top-4 — fine-grained  [hf:databricks/dbrx-base;
+unverified]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="dbrx-132b", family="moe", num_layers=40, d_model=6144,
+    num_heads=48, num_kv_heads=8, d_ff=10752, vocab_size=100352,
+    num_experts=16, experts_per_token=4, moe_capacity_factor=1.25,
+    rope_theta=500_000.0,
+    remat="full", microbatches=8,
+)
+
+SMOKE = FULL.with_(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=512, num_experts=4, experts_per_token=2,
+    dtype="float32", remat="none", microbatches=1, max_cache_len=64)

@@ -1,0 +1,18 @@
+"""llama-3.2-vision-11b [vlm] 40L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256 — cross-attn image layers every 5th layer; vision tower is a
+STUB (input_specs supplies patch embeddings (B, 1600, 1280))
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="llama-3.2-vision-11b", family="vlm", num_layers=40, d_model=4096,
+    num_heads=32, num_kv_heads=8, d_ff=14336, vocab_size=128256,
+    cross_attn_every=5, n_patches=1600, vision_dim=1280,
+    rope_theta=500_000.0,
+    remat="full", microbatches=4,
+)
+
+SMOKE = FULL.with_(
+    num_layers=6, cross_attn_every=3, d_model=128, num_heads=4,
+    num_kv_heads=2, d_ff=256, vocab_size=512, n_patches=16, vision_dim=48,
+    dtype="float32", remat="none", microbatches=1, max_cache_len=64)

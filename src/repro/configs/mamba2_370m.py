@@ -1,0 +1,14 @@
+"""mamba2-370m [ssm] 48L d_model=1024 (attn-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality)  [arXiv:2405.21060; unverified]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-370m", family="ssm", num_layers=48, d_model=1024,
+    num_heads=1, num_kv_heads=1, d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_headdim=64, ssm_chunk=256,
+    remat="full", microbatches=2,
+)
+
+SMOKE = FULL.with_(
+    num_layers=2, d_model=128, vocab_size=512, ssm_state=16, ssm_headdim=32,
+    ssm_chunk=16, dtype="float32", remat="none", microbatches=1)

@@ -1,0 +1,16 @@
+"""olmoe-1b-7b [moe] 16L d_model=2048 16H (GQA kv=16) d_ff=1024
+vocab=50304, MoE 64e top-8  [arXiv:2409.02060; hf]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="olmoe-1b-7b", family="moe", num_layers=16, d_model=2048,
+    num_heads=16, num_kv_heads=16, d_ff=1024, vocab_size=50304,
+    num_experts=64, experts_per_token=8, moe_capacity_factor=1.25,
+    qk_norm=True,
+    remat="full", microbatches=4,
+)
+
+SMOKE = FULL.with_(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, d_ff=64,
+    vocab_size=512, num_experts=8, experts_per_token=2,
+    dtype="float32", remat="none", microbatches=1, max_cache_len=64)

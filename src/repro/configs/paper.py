@@ -1,0 +1,17 @@
+"""The paper's own model config: a behaviour LM over the session-sequence
+event alphabet (§5.4 extended — 'more advanced sequence models' from §6).
+
+~100M params, trainable end-to-end on this container by
+examples/train_behavior_lm.py; vocab = client-event alphabet + specials."""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="behavior-lm-100m", family="dense", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=12, d_ff=2048, vocab_size=2048,
+    tie_embeddings=True,
+    remat="none", microbatches=1, max_cache_len=1024,
+)
+
+SMOKE = FULL.with_(num_layers=2, d_model=128, num_heads=4, num_kv_heads=4,
+                   d_ff=256, vocab_size=512, dtype="float32",
+                   max_cache_len=64)

@@ -1,0 +1,15 @@
+"""qwen2-72b [dense] 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064 — GQA, QKV bias  [arXiv:2407.10671; hf]"""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-72b", family="dense", num_layers=80, d_model=8192,
+    num_heads=64, num_kv_heads=8, d_ff=29568, vocab_size=152064,
+    attn_bias=True, rope_theta=1_000_000.0,
+    remat="full", microbatches=16,
+)
+
+SMOKE = FULL.with_(
+    num_layers=2, d_model=128, num_heads=8, num_kv_heads=2, d_ff=256,
+    vocab_size=512, dtype="float32", remat="none", microbatches=1,
+    max_cache_len=64)

@@ -1,0 +1,19 @@
+"""qwen3-0.6b [dense] 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936 — qk_norm, GQA  [hf:Qwen/Qwen3-8B; hf]
+
+head_dim=128 (decoupled from d_model/num_heads) and tied embeddings, per
+the released Qwen3-0.6B."""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-0.6b", family="dense", num_layers=28, d_model=1024,
+    num_heads=16, num_kv_heads=8, d_ff=3072, vocab_size=151936,
+    head_dim=128, qk_norm=True, tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    remat="full", microbatches=2,
+)
+
+SMOKE = FULL.with_(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=256, vocab_size=512, dtype="float32", remat="none", microbatches=1,
+    max_cache_len=64)

@@ -1,0 +1,18 @@
+"""stablelm-3b [dense] 32L d_model=2560 32H (GQA kv=32) d_ff=6912
+vocab=50304  [hf:stabilityai/stablelm-2-1_6b; unverified]
+
+LayerNorm (not RMSNorm) per the StableLM family. Full rotary is used here
+(the released model uses partial rotary_pct=0.25 — noted deviation)."""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="stablelm-3b", family="dense", num_layers=32, d_model=2560,
+    num_heads=32, num_kv_heads=32, d_ff=6912, vocab_size=50304,
+    use_layernorm=True, rope_theta=10_000.0,
+    remat="full", microbatches=4,
+)
+
+SMOKE = FULL.with_(
+    num_layers=2, d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+    vocab_size=512, dtype="float32", remat="none", microbatches=1,
+    max_cache_len=64)

@@ -1,0 +1,20 @@
+"""whisper-tiny [audio] 4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865 —
+enc-dec, conv frontend (STUB: input_specs supplies precomputed frame
+embeddings (B, 1500, 384))  [arXiv:2212.04356; unverified]
+
+6 heads / vocab 51865 do not divide the 16-way model axis -> attention
+heads and vocab are replicated; only FFN/embed shard (arch_rules)."""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="whisper-tiny", family="encdec", num_layers=4, encoder_layers=4,
+    d_model=384, num_heads=6, num_kv_heads=6, d_ff=1536, vocab_size=51865,
+    n_frames=1500, max_target_len=448, use_layernorm=True,
+    tie_embeddings=True,
+    remat="full", microbatches=1,
+)
+
+SMOKE = FULL.with_(
+    num_layers=2, encoder_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+    d_ff=128, vocab_size=512, n_frames=20, max_target_len=64,
+    dtype="float32", remat="none", microbatches=1, max_cache_len=64)

@@ -1,0 +1,21 @@
+"""zamba2-7b [hybrid] 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 — Mamba2 backbone + shared attn blocks
+[arXiv:2411.15242; unverified]
+
+The shared transformer block runs after every 6th Mamba2 layer (13
+invocations + 3-layer tail). Per-invocation LoRA deltas omitted (DESIGN.md
+§Arch-applicability)."""
+from ..models.config import ModelConfig
+
+FULL = ModelConfig(
+    name="zamba2-7b", family="hybrid", num_layers=81, d_model=3584,
+    num_heads=32, num_kv_heads=32, d_ff=14336, vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_headdim=64, ssm_chunk=256,
+    attn_every=6,
+    remat="full", microbatches=4,
+)
+
+SMOKE = FULL.with_(
+    num_layers=5, attn_every=2, d_model=128, num_heads=4, num_kv_heads=4,
+    d_ff=256, vocab_size=512, ssm_state=16, ssm_headdim=32, ssm_chunk=16,
+    dtype="float32", remat="none", microbatches=1, max_cache_len=64)

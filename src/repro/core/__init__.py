@@ -1,0 +1,25 @@
+"""Core unified-logging substrate (the paper's contribution).
+
+Pipeline: raw client events (events.py, namespace.py) -> frequency-ordered
+dictionary (dictionary.py) -> sessionization (sessionize.py /
+distributed.py) -> materialized session sequences (sequences.py, varint.py)
+-> catalog (catalog.py). Pure-Python oracles in oracle.py.
+"""
+from .namespace import EventName, InvalidEventName, parse, is_valid, match, \
+    compile_pattern, LEVELS, ROLLUP_SCHEMAS
+from .events import ClientEvent, EventBatch, EventInitiator, NameTable
+from .dictionary import EventDictionary, histogram, assign_codes
+from .sessionize import sessionize, Sessionized, DEFAULT_GAP_MS, PAD_CODE
+from .sequences import SessionSequences, code_to_codepoint, codepoint_to_code
+from .catalog import EventCatalog, CatalogEntry
+from . import varint, oracle
+
+__all__ = [
+    "EventName", "InvalidEventName", "parse", "is_valid", "match",
+    "compile_pattern", "LEVELS", "ROLLUP_SCHEMAS",
+    "ClientEvent", "EventBatch", "EventInitiator", "NameTable",
+    "EventDictionary", "histogram", "assign_codes",
+    "sessionize", "Sessionized", "DEFAULT_GAP_MS", "PAD_CODE",
+    "SessionSequences", "code_to_codepoint", "codepoint_to_code",
+    "EventCatalog", "CatalogEntry", "varint", "oracle",
+]

@@ -1,0 +1,105 @@
+"""Auto-generated client-event catalog (paper §4.3).
+
+Rebuilt from every dictionary/histogram job, so always up to date: per event
+name it records the frequency-ordered code, daily count, a few sample
+events, and (optionally) developer-supplied descriptions. Browsable
+hierarchically, by namespace component, or by regex — the paper's interface,
+minus the web frontend.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from . import namespace
+from .dictionary import EventDictionary
+from .events import EventBatch
+
+
+@dataclass
+class CatalogEntry:
+    name: str
+    code: int
+    count: int
+    samples: list[str] = field(default_factory=list)  # sample event JSON
+    description: str = ""
+
+    def levels(self) -> tuple[str, ...]:
+        return namespace.parse(self.name).parts()
+
+
+@dataclass
+class EventCatalog:
+    entries: dict[str, CatalogEntry]
+
+    @staticmethod
+    def build(dictionary: EventDictionary, batch: EventBatch | None = None,
+              samples_per_event: int = 3,
+              descriptions: dict[str, str] | None = None) -> "EventCatalog":
+        entries: dict[str, CatalogEntry] = {}
+        sample_map: dict[int, list[str]] = {}
+        if batch is not None and batch.details is not None:
+            # First-k sampling per name id (the histogram job samples while
+            # it scans — §4.2).
+            for i in range(len(batch)):
+                nid = int(batch.name_id[i])
+                bucket = sample_map.setdefault(nid, [])
+                if len(bucket) < samples_per_event:
+                    bucket.append(batch.event_at(i).to_json())
+        for nid, name in enumerate(dictionary.table.names):
+            entries[name] = CatalogEntry(
+                name=name,
+                code=int(dictionary.code_of_name[nid]),
+                count=int(dictionary.counts[nid]),
+                samples=sample_map.get(nid, []),
+                description=(descriptions or {}).get(name, ""),
+            )
+        return EventCatalog(entries)
+
+    def describe(self, name: str, text: str) -> None:
+        """Developers may manually attach descriptions (§4.3)."""
+        self.entries[name].description = text
+
+    def search(self, pattern: str) -> list[CatalogEntry]:
+        rx = namespace.compile_pattern(pattern)
+        return sorted((e for n, e in self.entries.items() if rx.match(n)),
+                      key=lambda e: e.code)
+
+    def browse(self, **level_filters: str) -> list[CatalogEntry]:
+        """Filter by namespace components, e.g. browse(client='web', page='home')."""
+        idx = {lvl: i for i, lvl in enumerate(namespace.LEVELS)}
+        out = []
+        for e in self.entries.values():
+            parts = e.levels()
+            if all(parts[idx[k]] == v for k, v in level_filters.items()):
+                out.append(e)
+        return sorted(out, key=lambda e: e.code)
+
+    def top(self, k: int = 20) -> list[CatalogEntry]:
+        return sorted(self.entries.values(), key=lambda e: e.code)[:k]
+
+    def coverage(self) -> dict:
+        total = sum(e.count for e in self.entries.values())
+        top = self.top(100)
+        return dict(
+            names=len(self.entries),
+            events=total,
+            top100_frac=(sum(e.count for e in top) / total) if total else 0.0,
+            described=sum(1 for e in self.entries.values() if e.description),
+        )
+
+    def save(self, path: str) -> None:
+        payload = {n: dict(code=e.code, count=e.count, samples=e.samples,
+                           description=e.description)
+                   for n, e in self.entries.items()}
+        with open(path, "w") as f:
+            json.dump(payload, f)
+
+    @staticmethod
+    def load(path: str) -> "EventCatalog":
+        with open(path) as f:
+            payload = json.load(f)
+        return EventCatalog({
+            n: CatalogEntry(name=n, **v) for n, v in payload.items()})

@@ -1,0 +1,232 @@
+"""Unified client-event schema (paper §3.2, Table 2).
+
+Every event in the unified logging format carries exactly the same fields
+with exactly the same semantics::
+
+    event_initiator : {client, server} x {user, app}
+    event_name      : six-level hierarchical name (namespace.py)
+    user_id         : int64
+    session_id      : int64 (browser cookie / device identifier, hashed)
+    ip              : uint32 (IPv4, anonymizable in one place by construction)
+    timestamp       : int64 milliseconds since epoch
+    event_details   : event-specific key/value pairs (free-form)
+
+Two representations:
+
+* ``ClientEvent`` — one record (the "Thrift struct"); used at the edges
+  (generation, catalog samples, tests).
+* ``EventBatch`` — columnar struct-of-arrays over an interned name table;
+  this is what the JAX pipeline consumes. Interning event names into a
+  ``NameTable`` mirrors Elephant Bird's generated readers: the schema is
+  declared once and every downstream consumer shares it.
+"""
+from __future__ import annotations
+
+import enum
+import json
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Mapping, Sequence
+
+import numpy as np
+
+from . import namespace
+
+
+class EventInitiator(enum.IntEnum):
+    """{client, server} x {user, app} (paper Table 2)."""
+    CLIENT_USER = 0
+    CLIENT_APP = 1
+    SERVER_USER = 2
+    SERVER_APP = 3
+
+
+@dataclass(frozen=True)
+class ClientEvent:
+    event_initiator: EventInitiator
+    event_name: str
+    user_id: int
+    session_id: int
+    ip: int
+    timestamp: int
+    event_details: Mapping[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        namespace.parse(self.event_name)  # validates
+
+    def to_json(self) -> str:
+        d = dict(
+            event_initiator=int(self.event_initiator),
+            event_name=self.event_name,
+            user_id=int(self.user_id),
+            session_id=int(self.session_id),
+            ip=int(self.ip),
+            timestamp=int(self.timestamp),
+            event_details=dict(self.event_details),
+        )
+        return json.dumps(d, sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "ClientEvent":
+        d = json.loads(s)
+        return ClientEvent(
+            event_initiator=EventInitiator(d["event_initiator"]),
+            event_name=d["event_name"],
+            user_id=d["user_id"],
+            session_id=d["session_id"],
+            ip=d["ip"],
+            timestamp=d["timestamp"],
+            event_details=d.get("event_details", {}),
+        )
+
+
+class NameTable:
+    """Bidirectional intern table: canonical event name <-> dense int id.
+
+    Ids are assigned in first-seen order; the frequency-ordered *code*
+    assignment is a separate concern (core/dictionary.py), exactly as in the
+    paper where the daily histogram job derives the coding dictionary from
+    the raw name universe.
+    """
+
+    def __init__(self, names: Sequence[str] = ()):
+        self._names: list[str] = []
+        self._ids: dict[str, int] = {}
+        for n in names:
+            self.intern(n)
+
+    def intern(self, name: str) -> int:
+        got = self._ids.get(name)
+        if got is not None:
+            return got
+        namespace.parse(name)  # validate on first sight
+        nid = len(self._names)
+        self._names.append(name)
+        self._ids[name] = nid
+        return nid
+
+    def id_of(self, name: str) -> int:
+        return self._ids[name]
+
+    def name_of(self, nid: int) -> str:
+        return self._names[nid]
+
+    def __len__(self) -> int:
+        return len(self._names)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._ids
+
+    @property
+    def names(self) -> list[str]:
+        return list(self._names)
+
+    def match_ids(self, pattern: str) -> np.ndarray:
+        """Ids of all names matching a namespace glob pattern."""
+        rx = namespace.compile_pattern(pattern)
+        return np.array([i for i, n in enumerate(self._names) if rx.match(n)],
+                        dtype=np.int32)
+
+    def to_json(self) -> str:
+        return json.dumps(self._names)
+
+    @staticmethod
+    def from_json(s: str) -> "NameTable":
+        return NameTable(json.loads(s))
+
+
+@dataclass
+class EventBatch:
+    """Columnar batch of client events over a shared NameTable.
+
+    Arrays all share leading dim N. ``details`` is an optional object array
+    of JSON strings — analytics over session sequences never touch it, which
+    is the paper's point (§4.1: large query classes need names only).
+    """
+    table: NameTable
+    name_id: np.ndarray        # int32 (N,)
+    user_id: np.ndarray        # int64 (N,)
+    session_id: np.ndarray     # int64 (N,)
+    ip: np.ndarray             # uint32 (N,)
+    timestamp: np.ndarray      # int64 (N,) ms
+    initiator: np.ndarray      # int8  (N,)
+    details: np.ndarray | None = None   # object (N,) json strings
+
+    def __post_init__(self):
+        n = len(self.name_id)
+        for f in ("user_id", "session_id", "ip", "timestamp", "initiator"):
+            arr = getattr(self, f)
+            if len(arr) != n:
+                raise ValueError(f"column {f} length {len(arr)} != {n}")
+
+    def __len__(self) -> int:
+        return len(self.name_id)
+
+    @staticmethod
+    def from_events(events: Iterable[ClientEvent],
+                    table: NameTable | None = None) -> "EventBatch":
+        table = table if table is not None else NameTable()
+        rows = list(events)
+        return EventBatch(
+            table=table,
+            name_id=np.array([table.intern(e.event_name) for e in rows], np.int32),
+            user_id=np.array([e.user_id for e in rows], np.int64),
+            session_id=np.array([e.session_id for e in rows], np.int64),
+            ip=np.array([e.ip for e in rows], np.uint32),
+            timestamp=np.array([e.timestamp for e in rows], np.int64),
+            initiator=np.array([int(e.event_initiator) for e in rows], np.int8),
+            details=np.array([json.dumps(dict(e.event_details), sort_keys=True)
+                              for e in rows], dtype=object) if rows else None,
+        )
+
+    def event_at(self, i: int) -> ClientEvent:
+        return ClientEvent(
+            event_initiator=EventInitiator(int(self.initiator[i])),
+            event_name=self.table.name_of(int(self.name_id[i])),
+            user_id=int(self.user_id[i]),
+            session_id=int(self.session_id[i]),
+            ip=int(self.ip[i]),
+            timestamp=int(self.timestamp[i]),
+            event_details=(json.loads(self.details[i])
+                           if self.details is not None else {}),
+        )
+
+    @staticmethod
+    def concat(batches: Sequence["EventBatch"]) -> "EventBatch":
+        """Concatenate batches, re-interning name ids into the first table."""
+        if not batches:
+            raise ValueError("need at least one batch")
+        table = batches[0].table
+        name_ids = []
+        for b in batches:
+            if b.table is table:
+                name_ids.append(b.name_id)
+            else:
+                remap = np.array([table.intern(n) for n in b.table.names],
+                                 np.int32)
+                name_ids.append(remap[b.name_id])
+        cat = lambda f: np.concatenate([getattr(b, f) for b in batches])
+        details = None
+        if all(b.details is not None for b in batches):
+            details = np.concatenate([b.details for b in batches])
+        return EventBatch(
+            table=table,
+            name_id=np.concatenate(name_ids),
+            user_id=cat("user_id"),
+            session_id=cat("session_id"),
+            ip=cat("ip"),
+            timestamp=cat("timestamp"),
+            initiator=cat("initiator"),
+            details=details,
+        )
+
+    def take(self, idx: np.ndarray) -> "EventBatch":
+        return EventBatch(
+            table=self.table,
+            name_id=self.name_id[idx],
+            user_id=self.user_id[idx],
+            session_id=self.session_id[idx],
+            ip=self.ip[idx],
+            timestamp=self.timestamp[idx],
+            initiator=self.initiator[idx],
+            details=self.details[idx] if self.details is not None else None,
+        )

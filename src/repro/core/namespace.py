@@ -1,0 +1,123 @@
+"""Hierarchical six-level client-event namespace (paper §3.2, Table 1).
+
+Event names are ``client:page:section:component:element:action`` — lowercased,
+colon-delimited, read right-to-left ("a profile_click on the avatar of a tweet
+in the mentions stream of the home page on web"). The namespace supports:
+
+* canonical parse/format + validation (combats the dreaded camel_Snake),
+* glob patterns (``web:home:mentions:*``, ``*:profile_click``) compiled to
+  regexes for slice-and-dice selection,
+* the five Oink roll-up schemas of §3.2 (progressively wildcarded levels).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Iterable, Sequence
+
+LEVELS = ("client", "page", "section", "component", "element", "action")
+NUM_LEVELS = len(LEVELS)
+
+# Lowercase snake_case tokens only; empty components are permitted (a page
+# without sections logs an empty section — §3.2 discusses this trade-off).
+_TOKEN_RE = re.compile(r"^[a-z0-9_]*$")
+
+# The five roll-up schemas from §3.2, expressed as masks of which levels are
+# kept (True) vs wildcarded (False):  (c,p,s,comp,elem,action)
+ROLLUP_SCHEMAS: tuple[tuple[bool, ...], ...] = (
+    (True, True, True, True, True, True),
+    (True, True, True, True, False, True),
+    (True, True, True, False, False, True),
+    (True, True, False, False, False, True),
+    (True, False, False, False, False, True),
+)
+
+
+class InvalidEventName(ValueError):
+    """Raised for names violating the unified naming specification."""
+
+
+@dataclass(frozen=True)
+class EventName:
+    client: str
+    page: str
+    section: str
+    component: str
+    element: str
+    action: str
+
+    def __post_init__(self):
+        for level, token in zip(LEVELS, self.parts()):
+            if not _TOKEN_RE.match(token):
+                raise InvalidEventName(
+                    f"{level}={token!r}: must be lowercase snake_case "
+                    f"(got non-conforming token in {':'.join(self.parts())!r})"
+                )
+        if not self.client or not self.action:
+            raise InvalidEventName("client and action levels must be non-empty")
+
+    def parts(self) -> tuple[str, ...]:
+        return (self.client, self.page, self.section,
+                self.component, self.element, self.action)
+
+    def canonical(self) -> str:
+        return ":".join(self.parts())
+
+    def rollup(self, schema: Sequence[bool]) -> str:
+        """Project onto one of the five roll-up schemas (wildcard = '*')."""
+        return ":".join(p if keep else "*"
+                        for p, keep in zip(self.parts(), schema))
+
+    def __str__(self) -> str:  # pragma: no cover - convenience
+        return self.canonical()
+
+
+def parse(name: str) -> EventName:
+    """Parse a canonical colon-delimited name, validating each token."""
+    parts = name.split(":")
+    if len(parts) != NUM_LEVELS:
+        raise InvalidEventName(
+            f"expected {NUM_LEVELS} colon-delimited levels, got {len(parts)}: {name!r}")
+    return EventName(*parts)
+
+
+def is_valid(name: str) -> bool:
+    try:
+        parse(name)
+        return True
+    except InvalidEventName:
+        return False
+
+
+def compile_pattern(pattern: str) -> re.Pattern:
+    """Compile a glob pattern over the namespace into a regex.
+
+    A bare ``*`` occupying the *first* or *last* level absorbs any number of
+    whole levels — matching the paper's usage ``web:home:mentions:*`` (all
+    events under the mentions stream) and ``*:profile_click`` (profile clicks
+    across all clients). A bare ``*`` in the middle matches exactly one level;
+    a ``*`` embedded in a token matches within that level only.
+    """
+    parts = pattern.split(":")
+    if all(p == "*" for p in parts):
+        return re.compile(r"^.*$")
+
+    def token(p: str) -> str:
+        return re.escape(p).replace(r"\*", "[a-z0-9_]*")
+
+    head = ""
+    tail = ""
+    if parts[0] == "*":
+        head = r"(?:[a-z0-9_]*:)*"
+        parts = parts[1:]
+    if parts and parts[-1] == "*":
+        tail = r"(?::[a-z0-9_]*)*"
+        parts = parts[:-1]
+    body = ":".join("[a-z0-9_]*" if p == "*" else token(p) for p in parts)
+    return re.compile("^" + head + body + tail + "$")
+
+
+def match(pattern: str, names: Iterable[str]) -> list[str]:
+    """Expand a glob pattern to all matching canonical names."""
+    rx = compile_pattern(pattern)
+    return [n for n in names if rx.match(n)]

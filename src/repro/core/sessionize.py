@@ -1,0 +1,171 @@
+"""Session reconstruction (paper §4.2) as a TPU-native sort + segment pass.
+
+The paper reconstructs sessions with a Hadoop group-by on
+``(user_id, session_id)`` followed by a 30-minute-inactivity split. Here the
+same dataflow is a single fused lexicographic sort (``jax.lax.sort`` with
+``num_keys=3`` over user, session, timestamp) followed by segment-boundary
+detection and ``segment_*`` reductions — no shuffle, no reducers, one XLA
+program. The distributed variant (core/distributed.py) prepends the paper's
+shuffle as an ``all_to_all`` keyed repartition over the mesh ``data`` axis.
+
+Identifiers and timestamps are int64; JAX defaults to 32-bit, so the jitted
+pipeline is traced under ``jax.experimental.enable_x64`` — scoped here only,
+never leaking into model code.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+# 30 minutes, following standard practice (paper §4.2).
+DEFAULT_GAP_MS = 30 * 60 * 1000
+PAD_CODE = -1  # padding symbol in materialized sequence tensors
+
+_I64_MAX = np.iinfo(np.int64).max
+
+
+@dataclass
+class Sessionized:
+    """Result of one sessionize pass. All arrays are device/ndarray.
+
+    ``num_sessions`` is the *true* session count; arrays are materialized at
+    the static caps (max_sessions, max_len) — rows past num_sessions and
+    positions past length are padding. ``truncated`` flags capacity overflow
+    so callers can re-run with larger caps (production behaviour: the log
+    mover sizes caps from the histogram job's stats).
+    """
+    symbols: jax.Array      # (max_sessions, max_len) int32, PAD_CODE padded
+    length: jax.Array       # (max_sessions,) int32 — true event count (may exceed max_len)
+    user_id: jax.Array      # (max_sessions,) int64
+    session_id: jax.Array   # (max_sessions,) int64
+    ip: jax.Array           # (max_sessions,) int64 (uint32 range)
+    start_ts: jax.Array     # (max_sessions,) int64 ms
+    duration_s: jax.Array   # (max_sessions,) int32 seconds (paper stores seconds)
+    num_sessions: jax.Array # () int32
+    num_events: jax.Array   # () int32 — valid events processed
+    truncated: jax.Array    # () bool — any session cap overflow
+
+    def trimmed(self) -> "Sessionized":
+        n = int(self.num_sessions)
+        return Sessionized(
+            symbols=np.asarray(self.symbols)[:n],
+            length=np.asarray(self.length)[:n],
+            user_id=np.asarray(self.user_id)[:n],
+            session_id=np.asarray(self.session_id)[:n],
+            ip=np.asarray(self.ip)[:n],
+            start_ts=np.asarray(self.start_ts)[:n],
+            duration_s=np.asarray(self.duration_s)[:n],
+            num_sessions=np.int32(n),
+            num_events=np.asarray(self.num_events),
+            truncated=np.asarray(self.truncated),
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("gap_ms", "max_sessions", "max_len"))
+def _sessionize(user_id, session_id, timestamp, code, ip, valid,
+                *, gap_ms: int, max_sessions: int, max_len: int):
+    n = user_id.shape[0]
+    i64max = jnp.asarray(_I64_MAX, jnp.int64)
+
+    # Invalid rows sort to the end (all-max keys).
+    u = jnp.where(valid, user_id, i64max)
+    s = jnp.where(valid, session_id, i64max)
+    t = jnp.where(valid, timestamp, i64max)
+
+    u, s, t, code_s, ip_s, valid_s = jax.lax.sort(
+        (u, s, t, code.astype(jnp.int32), ip.astype(jnp.int64),
+         valid.astype(jnp.int32)),
+        num_keys=3, is_stable=True)
+    valid_s = valid_s.astype(bool)
+
+    idx = jnp.arange(n, dtype=jnp.int32)
+    prev_u = jnp.roll(u, 1)
+    prev_s = jnp.roll(s, 1)
+    prev_t = jnp.roll(t, 1)
+    first = idx == 0
+    new_seg = valid_s & (first
+                         | (u != prev_u)
+                         | (s != prev_s)
+                         | ((t - prev_t) > gap_ms))
+
+    # Dense segment id per event; invalid rows -> drop bucket (= max_sessions
+    # after clamping, also used for capacity overflow).
+    seg = jnp.cumsum(new_seg.astype(jnp.int32)) - 1
+    seg = jnp.where(valid_s, seg, max_sessions)
+    overflow = seg > max_sessions
+    seg = jnp.minimum(seg, max_sessions)
+
+    num_sessions_true = jnp.sum(new_seg.astype(jnp.int32))
+    num_sessions = jnp.minimum(num_sessions_true, max_sessions)
+    num_events = jnp.sum(valid_s.astype(jnp.int32))
+
+    nseg = max_sessions + 1  # + drop bucket
+    ones = jnp.ones_like(seg)
+    length = jax.ops.segment_sum(ones, seg, num_segments=nseg)
+    start_idx = jax.ops.segment_min(idx, seg, num_segments=nseg)
+    start_ts = jax.ops.segment_min(t, seg, num_segments=nseg)
+    end_ts = jax.ops.segment_max(
+        jnp.where(valid_s, t, jnp.asarray(0, jnp.int64)), seg, num_segments=nseg)
+    seg_user = jax.ops.segment_max(
+        jnp.where(valid_s, u, jnp.asarray(-1, jnp.int64)), seg, num_segments=nseg)
+    seg_sess = jax.ops.segment_max(
+        jnp.where(valid_s, s, jnp.asarray(-1, jnp.int64)), seg, num_segments=nseg)
+    seg_ip = jax.ops.segment_max(
+        jnp.where(valid_s, ip_s, jnp.asarray(-1, jnp.int64)), seg, num_segments=nseg)
+
+    pos = idx - start_idx[seg]
+    # Scatter codes into the padded (sessions, time) tensor; OOB rows/cols
+    # (drop bucket, beyond max_len) are dropped by mode='drop'.
+    symbols = jnp.full((max_sessions, max_len), PAD_CODE, jnp.int32)
+    symbols = symbols.at[seg, pos].set(code_s, mode="drop")
+
+    duration_s = ((end_ts[:max_sessions] - start_ts[:max_sessions])
+                  // 1000).astype(jnp.int32)
+    empty = length[:max_sessions] == 0
+    return dict(
+        symbols=symbols,
+        length=length[:max_sessions],
+        user_id=jnp.where(empty, -1, seg_user[:max_sessions]),
+        session_id=jnp.where(empty, -1, seg_sess[:max_sessions]),
+        ip=jnp.where(empty, -1, seg_ip[:max_sessions]),
+        start_ts=jnp.where(empty, 0, start_ts[:max_sessions]),
+        duration_s=jnp.where(empty, 0, duration_s),
+        num_sessions=num_sessions,
+        num_events=num_events,
+        truncated=jnp.any(overflow) | (num_sessions_true > max_sessions)
+                  | jnp.any(length[:max_sessions] > max_len),
+    )
+
+
+def sessionize(user_id, session_id, timestamp, code, ip=None, valid=None, *,
+               gap_ms: int = DEFAULT_GAP_MS,
+               max_sessions: int | None = None,
+               max_len: int | None = None) -> Sessionized:
+    """Reconstruct sessions and materialize padded symbol sequences.
+
+    Inputs are parallel event columns in *arbitrary order* (the warehouse
+    guarantees only partial time order, §2). Static caps default to
+    worst-case (every event its own session / one session holding all).
+    """
+    n = len(user_id)
+    if max_sessions is None:
+        max_sessions = n
+    if max_len is None:
+        max_len = n
+    if ip is None:
+        ip = np.zeros(n, np.int64)
+    if valid is None:
+        valid = np.ones(n, bool)
+    with enable_x64():
+        out = _sessionize(
+            jnp.asarray(user_id, jnp.int64), jnp.asarray(session_id, jnp.int64),
+            jnp.asarray(timestamp, jnp.int64), jnp.asarray(code, jnp.int32),
+            jnp.asarray(ip, jnp.int64), jnp.asarray(valid, bool),
+            gap_ms=int(gap_ms), max_sessions=int(max_sessions),
+            max_len=int(max_len))
+    return Sessionized(**out)

@@ -1,0 +1,54 @@
+"""Byte-level variable-length materialization of session sequences (§4.2).
+
+The paper's coding trick: frequent events get small unicode code points,
+which need fewer bytes in UTF-8 — variable-length coding for free. We
+reproduce it exactly: codes -> (surrogate-skipping) code points -> UTF-8.
+The compression benchmark (benchmarks/compression.py) measures this against
+the raw client-event log representation to validate the ~50x claim.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .sequences import SessionSequences, code_to_codepoint, codepoint_to_code
+
+
+def utf8_length(codepoints: np.ndarray) -> np.ndarray:
+    """Bytes per code point under UTF-8 (vectorized)."""
+    cp = np.asarray(codepoints, np.int64)
+    return np.where(cp < 0x80, 1,
+                    np.where(cp < 0x800, 2,
+                             np.where(cp < 0x10000, 3, 4))).astype(np.int64)
+
+
+def encoded_size_bytes(seqs: SessionSequences) -> int:
+    """Total UTF-8 bytes to store all session_sequence strings."""
+    mask = seqs.mask()
+    cps = code_to_codepoint(np.where(mask, seqs.symbols, 0))
+    return int((utf8_length(cps) * mask).sum())
+
+
+def encode_session(symbols: np.ndarray) -> bytes:
+    """One session's symbols -> UTF-8 bytes (a valid unicode string)."""
+    cps = code_to_codepoint(np.asarray(symbols, np.int64))
+    return "".join(chr(int(c)) for c in cps).encode("utf-8")
+
+
+def decode_session(data: bytes) -> np.ndarray:
+    cps = np.array([ord(ch) for ch in data.decode("utf-8")], np.int64)
+    return codepoint_to_code(cps).astype(np.int32)
+
+
+def encode_store(seqs: SessionSequences) -> list[bytes]:
+    return [encode_session(seqs.session_symbols(i)) for i in range(len(seqs))]
+
+
+def raw_log_size_bytes(num_events: int, mean_name_len: float,
+                       mean_details_len: float = 64.0) -> int:
+    """Model of the raw client-event Thrift record footprint, per §3.2
+    Table 2: initiator(1) + name(string) + user_id(8) + session_id(8) +
+    ip(4) + timestamp(8) + details(string) + Thrift field headers (~3 bytes
+    per field x 7 fields).
+    """
+    per_event = 1 + mean_name_len + 8 + 8 + 4 + 8 + mean_details_len + 21
+    return int(num_events * per_event)

@@ -1,0 +1,19 @@
+"""Data substrate: synthetic log generation, simulated Scribe delivery,
+Oink workflow manager, and the LM batch pipeline over session sequences."""
+from .loggen import LogGenConfig, GeneratedLog, generate, build_name_table
+from .scribe import (ZooKeeperSim, Aggregator, ScribeDaemon, LogMover,
+                     DeliveryError, deliver_batch, read_warehouse_hour)
+from .oink import Oink, Job, JobTrace, DependencyError
+from .pipeline import (SessionBatchPipeline, PipelineConfig, pack_sessions,
+                       encode_tokens, lm_vocab_size, synthetic_batch,
+                       PAD_ID, BOS_ID, EOS_ID, UNK_ID, NUM_SPECIALS)
+
+__all__ = [
+    "LogGenConfig", "GeneratedLog", "generate", "build_name_table",
+    "ZooKeeperSim", "Aggregator", "ScribeDaemon", "LogMover",
+    "DeliveryError", "deliver_batch", "read_warehouse_hour",
+    "Oink", "Job", "JobTrace", "DependencyError",
+    "SessionBatchPipeline", "PipelineConfig", "pack_sessions",
+    "encode_tokens", "lm_vocab_size", "synthetic_batch",
+    "PAD_ID", "BOS_ID", "EOS_ID", "UNK_ID", "NUM_SPECIALS",
+]

@@ -1,0 +1,149 @@
+"""Deterministic sharded LM batch pipeline over session sequences.
+
+Session sequences are the training corpus for the behaviour LMs (§5.4
+extended): each session becomes ``BOS <symbols> EOS`` in a packed token
+stream, chunked to fixed-length rows. The pipeline is:
+
+* **deterministic** — (seed, epoch, step) fully determines every batch, so a
+  restarted job resumes bit-identically (fault tolerance requirement);
+* **sharded** — each data-parallel host reads only its slice (shard_index /
+  num_shards), no host reads the full corpus;
+* **prefetched** — a background thread keeps a bounded queue of ready
+  batches so device steps never wait on host work (straggler mitigation at
+  the input layer).
+
+Token space: codes are shifted by NUM_SPECIALS; 0=PAD 1=BOS 2=EOS 3=UNK.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.sequences import SessionSequences
+
+PAD_ID, BOS_ID, EOS_ID, UNK_ID = 0, 1, 2, 3
+NUM_SPECIALS = 4
+
+
+def lm_vocab_size(alphabet_size: int) -> int:
+    return alphabet_size + NUM_SPECIALS
+
+
+def encode_tokens(symbols: np.ndarray) -> np.ndarray:
+    """Event codes -> LM token ids (shift past specials)."""
+    return np.asarray(symbols, np.int64) + NUM_SPECIALS
+
+
+def pack_sessions(seqs: SessionSequences, seq_len: int,
+                  shuffle_seed: int | None = None) -> np.ndarray:
+    """Pack sessions into (rows, seq_len+1) token matrix.
+
+    Each row holds seq_len+1 tokens so (inputs, targets) shift by one inside
+    the row. Sessions are concatenated as BOS s0..sn EOS; the tail row is
+    PAD-padded. Packing (vs one-session-per-row) keeps MXU utilization high
+    — sessions are much shorter than seq_len.
+    """
+    order = np.arange(len(seqs))
+    if shuffle_seed is not None:
+        np.random.default_rng(shuffle_seed).shuffle(order)
+    stored = seqs.stored_length()
+    stream_len = int((stored + 2).sum())
+    row = seq_len + 1
+    n_rows = max(1, -(-stream_len // row))
+    flat = np.full(n_rows * row, PAD_ID, np.int32)
+    pos = 0
+    for i in order:
+        l = int(stored[i])
+        flat[pos] = BOS_ID
+        flat[pos + 1: pos + 1 + l] = encode_tokens(seqs.symbols[i, :l])
+        flat[pos + 1 + l] = EOS_ID
+        pos += l + 2
+    return flat.reshape(n_rows, row)
+
+
+@dataclass
+class PipelineConfig:
+    seq_len: int = 512
+    global_batch: int = 8
+    shard_index: int = 0
+    num_shards: int = 1
+    seed: int = 0
+    prefetch: int = 2
+    drop_remainder: bool = True
+
+
+class SessionBatchPipeline:
+    """Iterable over {tokens, targets, loss_mask} batches.
+
+    ``global_batch`` rows per step across all shards; this shard yields
+    ``global_batch // num_shards`` rows. Epochs reshuffle rows with
+    seed=(seed, epoch); iteration order is identical across restarts.
+    """
+
+    def __init__(self, seqs: SessionSequences, cfg: PipelineConfig):
+        if cfg.global_batch % cfg.num_shards:
+            raise ValueError("global_batch must divide by num_shards")
+        self.cfg = cfg
+        self.rows = pack_sessions(seqs, cfg.seq_len, shuffle_seed=cfg.seed)
+        self.local_batch = cfg.global_batch // cfg.num_shards
+
+    def batches_per_epoch(self) -> int:
+        usable = (len(self.rows) // self.cfg.global_batch) * self.cfg.global_batch
+        if usable == 0 and not self.cfg.drop_remainder:
+            return 1
+        return usable // self.cfg.global_batch
+
+    def _epoch_order(self, epoch: int) -> np.ndarray:
+        order = np.arange(len(self.rows))
+        np.random.default_rng((self.cfg.seed, epoch)).shuffle(order)
+        return order
+
+    def batch_at(self, epoch: int, step: int) -> dict[str, np.ndarray]:
+        """Deterministic random access — the restart/resume path."""
+        order = self._epoch_order(epoch)
+        lo = step * self.cfg.global_batch
+        rows = order[lo: lo + self.cfg.global_batch]
+        if len(rows) < self.cfg.global_batch:  # wrap (non-drop mode)
+            rows = np.concatenate([rows, order[: self.cfg.global_batch - len(rows)]])
+        # this shard's slice of the global batch
+        sl = rows[self.cfg.shard_index * self.local_batch:
+                  (self.cfg.shard_index + 1) * self.local_batch]
+        chunk = self.rows[sl]
+        tokens = chunk[:, :-1].astype(np.int32)
+        targets = chunk[:, 1:].astype(np.int32)
+        return dict(tokens=tokens, targets=targets,
+                    loss_mask=(targets != PAD_ID).astype(np.float32))
+
+    def epoch(self, epoch: int, start_step: int = 0):
+        """Prefetching iterator over one epoch, resumable at start_step."""
+        n = self.batches_per_epoch()
+        q: queue.Queue = queue.Queue(maxsize=self.cfg.prefetch)
+        stop = object()
+
+        def producer():
+            for step in range(start_step, n):
+                q.put(self.batch_at(epoch, step))
+            q.put(stop)
+
+        t = threading.Thread(target=producer, daemon=True)
+        t.start()
+        while True:
+            item = q.get()
+            if item is stop:
+                break
+            yield item
+
+    def __iter__(self):
+        return self.epoch(0)
+
+
+def synthetic_batch(rng: np.random.Generator, vocab: int, batch: int,
+                    seq_len: int) -> dict[str, np.ndarray]:
+    """Shape-correct random batch for smoke tests and benches."""
+    tokens = rng.integers(NUM_SPECIALS, vocab, (batch, seq_len + 1),
+                          dtype=np.int64).astype(np.int32)
+    return dict(tokens=tokens[:, :-1], targets=tokens[:, 1:],
+                loss_mask=np.ones((batch, seq_len), np.float32))

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper with impl dispatch), ref.py (pure-jnp oracle).
+Kernels are validated against their oracles in interpret mode on CPU; the
+dry-run/compile path uses the oracles (XLA-fused), since Pallas lowers to
+TPU only.
+"""
+from .flash_attention.ops import flash_attention
+from .funnel_match.ops import deepest_stage, reach_counts
+from .event_count.ops import histogram as event_histogram, count_codes
+
+__all__ = ["flash_attention", "deepest_stage", "reach_counts",
+           "event_histogram", "count_codes"]

@@ -1,0 +1,61 @@
+"""Blocked alphabet histogram — Pallas TPU kernel.
+
+The daily dictionary/count job (§4.2) reduced to hardware terms: scatter-add
+histograms are hostile to the VPU (serialized RMW), so the TPU-native
+formulation is compare-and-reduce — for an alphabet tile A and a symbol tile
+S, counts[a] += sum_s (S == a), an (|S| x |A|) broadcast compare reduced
+over symbols. All tiles live in VMEM; the alphabet axis is the innermost
+sequential grid dim so each symbol tile is read once per alphabet tile.
+
+Grid = (alphabet/block_a, N/block_n); out tile (block_a,) accumulates across
+the sequential n axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(sym_ref, out_ref, *, block_a: int, num_n_blocks: int):
+    ia = pl.program_id(0)
+    in_ = pl.program_id(1)
+
+    @pl.when(in_ == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    sym = sym_ref[...]                                   # (block_n,) int32
+    base = ia * block_a
+    # (block_n, block_a) compare; invalid positions were pre-mapped to -1.
+    a = base + jax.lax.broadcasted_iota(jnp.int32, (sym.shape[0], block_a), 1)
+    eq = (sym[:, None] == a).astype(jnp.int32)
+    out_ref[...] += jnp.sum(eq, axis=0)
+
+
+def histogram_pallas(symbols_flat, *, alphabet_size: int,
+                     block_a: int = 512, block_n: int = 4096,
+                     interpret: bool = False):
+    """symbols_flat: (N,) int32 with invalid positions = -1."""
+    n = symbols_flat.shape[0]
+    block_n = min(block_n, n)
+    pad_n = (-n) % block_n
+    if pad_n:
+        symbols_flat = jnp.pad(symbols_flat, (0, pad_n),
+                               constant_values=-1)
+    block_a = min(block_a, alphabet_size)
+    pad_a = (-alphabet_size) % block_a
+    a_total = alphabet_size + pad_a
+    nn = symbols_flat.shape[0] // block_n
+
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, block_a=block_a, num_n_blocks=nn),
+        grid=(a_total // block_a, nn),
+        in_specs=[pl.BlockSpec((block_n,), lambda ia, in_: (in_,))],
+        out_specs=pl.BlockSpec((block_a,), lambda ia, in_: (ia,)),
+        out_shape=jax.ShapeDtypeStruct((a_total,), jnp.int32),
+        interpret=interpret,
+    )(symbols_flat)
+    return out[:alphabet_size]

@@ -1,0 +1,25 @@
+"""Public histogram / event-count ops over session-sequence tensors."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import histogram_pallas
+from .ref import histogram_ref
+
+
+def histogram(symbols, mask, alphabet_size: int, *, impl: str = "ref"):
+    """(alphabet,) counts of each code over valid positions of (S, L)."""
+    symbols = jnp.asarray(symbols)
+    mask = jnp.asarray(mask)
+    if impl == "ref":
+        return histogram_ref(symbols, mask, alphabet_size)
+    flat = jnp.where(mask, symbols, -1).reshape(-1).astype(jnp.int32)
+    return histogram_pallas(flat, alphabet_size=alphabet_size,
+                            interpret=(impl == "interpret"))
+
+
+def count_codes(symbols, mask, target_codes, alphabet_size: int, *,
+                impl: str = "ref") -> int:
+    """Total occurrences of any target code (the SUM variant of §5.2)."""
+    h = histogram(symbols, mask, alphabet_size, impl=impl)
+    return int(h[jnp.asarray(target_codes)].sum())

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the blocked alphabet histogram."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def histogram_ref(symbols, mask, alphabet_size: int) -> jnp.ndarray:
+    """(alphabet,) int32 counts of each code over valid positions."""
+    ids = jnp.where(mask, jnp.clip(symbols, 0, alphabet_size - 1),
+                    alphabet_size)
+    return jax.ops.segment_sum(
+        jnp.ones(ids.size, jnp.int32), ids.reshape(-1),
+        num_segments=alphabet_size + 1)[:alphabet_size]

@@ -1,0 +1,131 @@
+"""Flash attention forward — Pallas TPU kernel.
+
+Online-softmax blocked attention with explicit VMEM tiling:
+
+* grid = (batch, q_heads, Lq/block_q, Lk/block_k); the k axis is the
+  innermost (sequential on TPU) so the (m, l, acc) running statistics live
+  in VMEM scratch across k steps;
+* GQA is native: the k/v BlockSpec index_map divides the q-head index by the
+  group size, so kv tiles are fetched once per group — no head replication
+  in HBM;
+* block shapes default to (block_q, d) x (block_k, d) with d padded to the
+  128-lane register width; MXU work is the (block_q, block_k) @ (block_k, d)
+  pair per step;
+* causal masking prunes *compute* inside fully-masked blocks via pl.when
+  (the tile fetch still happens — grid skipping lands with scalar prefetch,
+  noted in DESIGN.md as a TPU-side follow-up).
+
+VMEM budget per step (bf16 in, f32 acc), defaults block_q=block_k=256,
+d<=256: q 128KB + k/v 256KB + acc/m/l ~260KB + out 128KB << 16MB/core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale: float, causal: bool, kv_len: int, q_offset: int,
+                block_q: int, block_k: int, num_k_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = q_offset + iq * block_q
+    k_start = ik * block_k
+
+    # Skip compute for blocks entirely above the causal diagonal or entirely
+    # past kv_len; running stats are unchanged there.
+    diag_live = (not causal) or (k_start <= q_start + block_q - 1)
+    len_live = k_start < kv_len
+
+    @pl.when(jnp.logical_and(diag_live, len_live))
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)         # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)         # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)         # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos >= kv_len
+        if causal:
+            mask = jnp.logical_or(mask, kpos > qpos)
+        s = jnp.where(mask, NEG_INF, s)
+
+        m_prev = m_ref[...]                         # (bq,)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])             # (bq, bk)
+        l_cur = jnp.sum(p, axis=1)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + l_cur
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        scale: float | None = None,
+                        kv_len: int | None = None, q_offset: int = 0,
+                        block_q: int = 256, block_k: int = 256,
+                        interpret: bool = False):
+    """q: (B, H, Lq, D); k, v: (B, KVH, Lk, D). Returns (B, H, Lq, D)."""
+    b, h, lq, d = q.shape
+    _, kvh, lk, _ = k.shape
+    assert h % kvh == 0
+    g = h // kvh
+    if scale is None:
+        scale = d ** -0.5
+    if kv_len is None:
+        kv_len = lk
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    assert lq % block_q == 0 and lk % block_k == 0, (lq, block_q, lk, block_k)
+    nq, nk = lq // block_q, lk // block_k
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=float(scale), causal=causal, kv_len=int(kv_len),
+        q_offset=int(q_offset), block_q=block_q, block_k=block_k,
+        num_k_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, iq, ik: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

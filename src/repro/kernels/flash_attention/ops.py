@@ -1,0 +1,71 @@
+"""Jit'd public wrapper for flash attention.
+
+``flash_attention(..., impl=...)``:
+* ``"pallas"``    — TPU Pallas kernel (kernel.py);
+* ``"interpret"`` — same kernel, Pallas interpret mode (CPU validation);
+* ``"ref"``       — pure-jnp oracle (ref.py); the dry-run/compile path.
+
+Gradients flow through a recompute-based custom_vjp: the backward pass
+re-derives attention from the oracle formulation (flash backward recomputes
+p block-wise on TPU anyway; on this CPU container the oracle *is* the
+backward). This keeps the Pallas surface forward-only while training end to
+end — documented in DESIGN.md §Hardware-adaptation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import attention_ref, attention_blocked
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_pallas(q, k, v, causal, scale, kv_len, q_offset, interpret):
+    return flash_attention_fwd(q, k, v, causal=causal, scale=scale,
+                               kv_len=kv_len, q_offset=q_offset,
+                               interpret=interpret)
+
+
+def _flash_fwd_rule(q, k, v, causal, scale, kv_len, q_offset, interpret):
+    out = _flash_pallas(q, k, v, causal, scale, kv_len, q_offset, interpret)
+    return out, (q, k, v)
+
+
+def _flash_bwd_rule(causal, scale, kv_len, q_offset, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(
+            q_, k_, v_, causal=causal, scale=scale, kv_len=kv_len,
+            q_offset=q_offset), q, k, v)
+    return vjp(g)
+
+
+_flash_pallas.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    scale: float | None = None, kv_len=None,
+                    q_offset=0, impl: str = "ref", unroll: bool = False):
+    """GQA attention. q: (B, H, Lq, D); k, v: (B, KVH, Lk, D).
+
+    ``impl="ref"`` accepts traced kv_len/q_offset (the decode path);
+    the Pallas impls require them static (training/prefill shapes).
+    ``unroll`` unrolls the blocked impl's k-scan (cost-mode compiles).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, scale=scale,
+                             kv_len=kv_len, q_offset=q_offset)
+    if impl == "blocked":
+        if q.shape[2] == 1:   # decode: single-row scores are already cheap
+            return attention_ref(q, k, v, causal=causal, scale=scale,
+                                 kv_len=kv_len, q_offset=q_offset)
+        return attention_blocked(q, k, v, causal=causal, scale=scale,
+                                 kv_len=kv_len, q_offset=q_offset,
+                                 unroll=unroll)
+    return _flash_pallas(q, k, v, causal, float(scale), kv_len, q_offset,
+                         impl == "interpret")

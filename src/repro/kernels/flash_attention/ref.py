@@ -1,0 +1,130 @@
+"""Pure-jnp oracle for blocked GQA attention.
+
+Also the implementation the models use on non-TPU backends and in the
+multi-pod dry-run (XLA fuses it; Pallas lowering targets TPU and is
+validated against this oracle in interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None,
+                  kv_len: int | None = None, q_offset: int = 0):
+    """GQA attention oracle.
+
+    q: (B, H, Lq, D); k, v: (B, KVH, Lk, D) with H % KVH == 0.
+    ``kv_len`` masks padded key positions; ``q_offset`` is the absolute
+    position of q[0] (decode: q_offset = cache length so causal masking is
+    correct for a single new token).
+    """
+    b, h, lq, d = q.shape
+    _, kvh, lk, _ = k.shape
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    if scale is None:
+        scale = d ** -0.5
+
+    # GQA formulation depends on lq:
+    # * lq > 1 (train/prefill): head-REPEAT. Under TP the q-heads dim (h)
+    #   is what divides the model axis; a (kvh, g) reshape leaves no
+    #   shardable dim and GSPMD replicates the (.., lq, lk) score tensors
+    #   in the backward — 16x traffic. The repeat is a local broadcast.
+    # * lq == 1 (decode): grouped einsum. Scores are tiny but the CACHE is
+    #   huge; repeating it g-fold materializes/reshards gigabytes.
+    kpos = jnp.arange(lk)
+    mask = jnp.zeros((lq, lk), bool)
+    if causal:
+        qpos = q_offset + jnp.arange(lq)
+        mask = mask | (kpos[None, :] > qpos[:, None])
+    if kv_len is not None:
+        mask = mask | (kpos[None, :] >= kv_len)
+
+    if lq == 1 and g > 1:
+        qf = q.astype(jnp.float32).reshape(b, kvh, g, lq, d)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        s = jnp.einsum("bkgqd,bkld->bkgql", qf, kf) * scale
+        s = jnp.where(mask[None, None, None], NEG_INF, s)
+        p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+        p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        o = jnp.einsum("bkgql,bkld->bkgqd", p, vf)
+        return o.reshape(b, h, lq, d).astype(q.dtype)
+
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), g, axis=1) if g > 1 \
+        else k.astype(jnp.float32)
+    vf = jnp.repeat(v.astype(jnp.float32), g, axis=1) if g > 1 \
+        else v.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhld->bhql", qf, kf) * scale
+    s = jnp.where(mask[None, None], NEG_INF, s)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhql,bhld->bhqd", p, vf).astype(q.dtype)
+
+
+def attention_blocked(q, k, v, *, causal: bool = True,
+                      scale: float | None = None, kv_len: int | None = None,
+                      q_offset: int = 0, block_k: int = 1024,
+                      unroll: bool = False):
+    """Online-softmax attention in pure jnp (lax.scan over key blocks).
+
+    Identical math to the Pallas kernel, compiled by XLA: scores are
+    materialized only (Lq x block_k) at a time, which is what makes the 32k
+    prefill cells fit on chip. Differentiable (scan autodiff); the models'
+    remat policy bounds the backward residuals.
+    """
+    b, h, lq, d = q.shape
+    _, kvh, lk, _ = k.shape
+    g = h // kvh
+    if scale is None:
+        scale = d ** -0.5
+    if kv_len is None:
+        kv_len = lk
+    block_k = min(block_k, lk)
+    pad = (-lk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = k.shape[2] // block_k
+
+    # Head-repeat (see attention_ref): keeps the shardable h dim on every
+    # blockwise tensor, so the backward residuals shard over TP.
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    qf = q.astype(jnp.float32)
+    kb = k.astype(jnp.float32).reshape(b, h, nk, block_k, d
+                                       ).transpose(2, 0, 1, 3, 4)
+    vb = v.astype(jnp.float32).reshape(b, h, nk, block_k, d
+                                       ).transpose(2, 0, 1, 3, 4)
+    qpos = q_offset + jnp.arange(lq)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kc, vc, ik = inp
+        s = jnp.einsum("bhqd,bhld->bhql", qf, kc) * scale
+        kpos = ik * block_k + jnp.arange(block_k)
+        mask = kpos[None, :] >= kv_len
+        if causal:
+            mask = mask | (kpos[None, :] > qpos[:, None])
+        s = jnp.where(mask[None, None], NEG_INF, s)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhql,bhld->bhqd", p, vc)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, lq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, lq), jnp.float32)
+    a0 = jnp.zeros((b, h, lq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nk)),
+                                  unroll=True if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -1,0 +1,29 @@
+"""Public funnel-matching op: pattern tables -> per-stage reach counts."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import deepest_stage_pallas
+from .ref import pack_match_bits, deepest_stage_ref
+
+
+def deepest_stage(symbols, mask, stage_table, *, impl: str = "ref",
+                  block_s: int = 256):
+    """Per-session deepest funnel stage.
+
+    symbols: (S, L) int32; mask: (S, L) bool;
+    stage_table: (n_stages, alphabet) bool.
+    """
+    bits = pack_match_bits(jnp.asarray(symbols), jnp.asarray(mask),
+                           jnp.asarray(stage_table))
+    if impl == "ref":
+        return deepest_stage_ref(bits)
+    return deepest_stage_pallas(bits, block_s=block_s,
+                                interpret=(impl == "interpret"))
+
+
+def reach_counts(symbols, mask, stage_table, *, impl: str = "ref"):
+    """[(stage, sessions reaching)] — the paper's §5.3 output table."""
+    k = deepest_stage(symbols, mask, stage_table, impl=impl)
+    n_stages = stage_table.shape[0]
+    return [(j, int((k > j).sum())) for j in range(n_stages)]

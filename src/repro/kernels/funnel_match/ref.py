@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the funnel stage-automaton.
+
+Operates on the bit-packed representation shared with the kernel:
+``match_bits[s, t]`` has bit k set iff symbol t of session s satisfies
+funnel stage k (invalid positions = 0). The automaton state k advances by
+``(match_bits >> k) & 1`` per position — stage sets never advance past
+n_stages because bit n_stages is never set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_match_bits(symbols, mask, stage_table) -> jnp.ndarray:
+    """(S, L) int32 bitmask from symbols + per-stage code lookup table.
+
+    stage_table: (n_stages, alphabet) bool.
+    """
+    n_stages, alphabet = stage_table.shape
+    assert n_stages <= 30
+    sym = jnp.clip(symbols, 0, alphabet - 1)
+    bits = jnp.zeros(symbols.shape, jnp.int32)
+    for k in range(n_stages):
+        bits = bits | (stage_table[k][sym].astype(jnp.int32) << k)
+    return jnp.where(mask, bits, 0)
+
+
+def deepest_stage_ref(match_bits: jnp.ndarray) -> jnp.ndarray:
+    """(S,) deepest stage reached per session."""
+    s, l = match_bits.shape
+
+    def step(k, t):
+        adv = (match_bits[:, t] >> k) & 1
+        return k + adv, None
+
+    k0 = jnp.zeros((s,), jnp.int32)
+    k, _ = jax.lax.scan(step, k0, jnp.arange(l))
+    return k
+
+
+def deepest_stage_oracle_np(match_bits: np.ndarray) -> np.ndarray:
+    out = np.zeros(match_bits.shape[0], np.int32)
+    for si in range(match_bits.shape[0]):
+        k = 0
+        for t in range(match_bits.shape[1]):
+            if (int(match_bits[si, t]) >> k) & 1:
+                k += 1
+        out[si] = k
+    return out

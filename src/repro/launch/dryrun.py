@@ -1,0 +1,203 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell, prove it fits (memory_analysis), and extract roofline inputs
+(cost_analysis + HLO collective bytes).
+
+Two modes per cell:
+
+* ``full``  — the REAL config (scanned layers, production microbatching),
+  compiled on the production mesh. Proves sharding coherence + per-device
+  memory. XLA's HloCostAnalysis counts while-loop bodies ONCE, so this
+  compile is NOT used for FLOPs.
+* ``cost``  — reduced-depth UNROLLED variants (layers + microbatches as
+  python loops) compiled on the single-pod mesh; costs are exactly linear
+  (train: bilinear in (L, microbatches)), so two/three points extrapolate
+  to the full depth. Collective bytes come from the unrolled optimized HLO
+  (no while loops -> every collective instruction is counted once, true).
+
+Results are cached as JSON per (arch, shape, mesh, mode) under
+``results/dryrun/``; the sweep driver runs each cell in a subprocess.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+      --mesh single --mode full
+  python -m repro.launch.dryrun --all            # full sweep (both meshes)
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.environ.get("DRYRUN_RESULTS",
+                             os.path.join(os.path.dirname(__file__),
+                                          "../../../results/dryrun"))
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device payload bytes of collective ops in optimized HLO.
+
+    Convention: all-reduce counts 2x its output bytes (ring = reduce-scatter
+    + all-gather); others count 1x output bytes. Tuple-shaped outputs
+    (e.g. fused start ops) sum their parts. '-done' ops are skipped (the
+    '-start' carries the shape).
+    """
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict(out)
+    for line in hlo_text.splitlines():
+        if "-done" in line and ("collective" in line or "all-" in line):
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        if m.group(1):  # plain shape
+            nbytes = _shape_bytes(m.group(1), m.group(2))
+        else:           # tuple shape: sum components on this line up to '='
+            head = line.split("=")[0] + "=" + line.split("=")[1].split("(")[0]
+            nbytes = sum(_shape_bytes(d, s)
+                         for d, s in _TUPLE_RE.findall(head))
+            if kind == "all-reduce":  # tuple AR counts each operand once
+                nbytes //= 2 if False else 1
+        mult = 2 if kind == "all-reduce" else 1
+        out[kind] += mult * nbytes
+        counts[kind] += 1
+    out["total"] = sum(v for k, v in out.items())
+    out["instruction_counts"] = counts
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    from .mesh import make_production_mesh
+    from .shapes import make_cell, cell_supported, SHAPES, Shape
+
+    ok, reason = cell_supported(arch, shape_name)
+    if not ok:
+        return dict(arch=arch, shape=shape_name, mesh=mesh_kind, mode=mode,
+                    skipped=True, reason=reason)
+
+    overrides = dict(overrides or {})
+    # Mesh refactorization lever (same 256 chips): {"mesh_data": 32,
+    # "mesh_model": 8} etc. Consumed here, not by ModelConfig.
+    data = overrides.pop("mesh_data", 16)
+    model = overrides.pop("mesh_model", 256 // data)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"),
+                                data=data, model=model)
+    t0 = time.time()
+    cell = make_cell(arch, shape_name, mesh, overrides)
+    fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                 donate_argnums=cell.donate_argnums)
+    with mesh:  # mesh context: with_sharding_constraint(P) binds here
+        lowered = fn.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    result = dict(
+        arch=arch, shape=shape_name, mesh=mesh_kind, mode=mode, tag=tag,
+        skipped=False, overrides=overrides or {},
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+        ),
+        flops=cost.get("flops"),
+        bytes_accessed=cost.get("bytes accessed"),
+        utilization=cost.get("utilization", None),
+    )
+    if mode == "cost":
+        result["collectives"] = collective_bytes(compiled.as_text())
+    return result
+
+
+def result_path(arch, shape, mesh, mode, tag=""):
+    name = f"{arch}__{shape}__{mesh}__{mode}{('__' + tag) if tag else ''}.json"
+    return os.path.join(RESULTS_DIR, name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--mode", default="full", choices=["full", "cost"])
+    ap.add_argument("--overrides", default="{}")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+
+    if args.all:
+        from ..configs import ASSIGNED
+        from .shapes import SHAPES
+        cells = [(a, s, m) for a in ASSIGNED for s in SHAPES
+                 for m in ("single", "multi")]
+        failures = 0
+        for arch, shape, mesh in cells:
+            path = result_path(arch, shape, mesh, "full")
+            if os.path.exists(path) and not args.force:
+                print(f"[cached] {arch} {shape} {mesh}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--mode", "full"]
+            print(f"[run] {arch} {shape} {mesh}", flush=True)
+            r = subprocess.run(cmd, cwd=os.getcwd())
+            failures += (r.returncode != 0)
+        sys.exit(1 if failures else 0)
+
+    try:
+        res = run_cell(args.arch, args.shape, args.mesh, args.mode,
+                       json.loads(args.overrides), args.tag)
+    except Exception:
+        res = dict(arch=args.arch, shape=args.shape, mesh=args.mesh,
+                   mode=args.mode, tag=args.tag, error=True,
+                   traceback=traceback.format_exc())
+    path = result_path(args.arch, args.shape, args.mesh, args.mode, args.tag)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    if res.get("error"):
+        print(res["traceback"], file=sys.stderr)
+        sys.exit(1)
+    if res.get("skipped"):
+        print(f"SKIP {args.arch} {args.shape}: {res['reason']}")
+        return
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("overrides",)}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Restores the newest checkpoint (if any) and serves batched next-event
+predictions over session prefixes drawn from the live pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="behavior-lm-100m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    import jax
+    from ..configs import full_config, smoke_config
+    from ..core import EventDictionary, SessionSequences, sessionize
+    from ..data import (generate, LogGenConfig, SessionBatchPipeline,
+                        PipelineConfig, lm_vocab_size, NUM_SPECIALS)
+    from ..models import get_model
+    from ..train import CheckpointManager, OptConfig, init_opt_state
+    from ..serve import Server, ServeConfig
+
+    log = generate(LogGenConfig(n_users=400, seed=0))
+    b = log.batch
+    d = EventDictionary.build(b.table, b.name_id)
+    codes = np.asarray(d.encode_ids(b.name_id))
+    s = sessionize(b.user_id, b.session_id, b.timestamp, codes,
+                   b.ip.astype(np.int64), max_sessions=len(b), max_len=2048)
+    seqs = SessionSequences.from_sessionized(s)
+    vocab = lm_vocab_size(d.alphabet_size)
+
+    cfg = (smoke_config(args.arch) if args.smoke else full_config(args.arch))
+    cfg = cfg.with_(vocab_size=max(vocab, 16), max_cache_len=256)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(args.ckpt)
+    if mgr.latest_step() is not None:
+        state = dict(params=params,
+                     opt=init_opt_state(params, OptConfig()))
+        state = mgr.restore(state)
+        params = jax.tree.map(jax.numpy.asarray, state["params"])
+        print(f"restored checkpoint step {mgr.latest_step()}")
+    else:
+        print("no checkpoint found — serving untrained weights")
+
+    pipe = SessionBatchPipeline(seqs, PipelineConfig(
+        seq_len=64, global_batch=max(args.batch, 1)))
+    prompts = pipe.batch_at(0, 0)["tokens"][: args.batch, :32]
+    srv = Server(api, params, ServeConfig(
+        max_new_tokens=args.max_new_tokens, temperature=args.temperature))
+    gen = srv.generate(prompts)
+    for i in range(args.batch):
+        names = [d.name_of(t - NUM_SPECIALS) if t >= NUM_SPECIALS else "<s>"
+                 for t in gen[i]]
+        print(f"request {i}: " + " -> ".join(n.split(":")[-1]
+                                             for n in names))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""Cell definitions: (architecture x input shape) -> lowerable function,
+ShapeDtypeStruct arguments, and sharding trees.
+
+``input_specs(cfg, shape, rules)`` returns weak-type-correct, shardable
+ShapeDtypeStruct stand-ins for every model input — no device allocation.
+``make_cell`` assembles the jit-able callable for the dry-run:
+
+  train_4k     -> full train_step (fwd + bwd + AdamW) over packed tokens
+  prefill_32k  -> prefill (prompt -> KV cache / SSM state + last logits)
+  decode_32k   -> serve_step: ONE new token against a seq_len KV cache
+  long_500k    -> serve_step at 524288 context (SSM/hybrid only)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import full_config
+from ..dist.sharding import ShardingRules, arch_rules, tree_spec, \
+    adapt_rules_for_mesh
+from ..models import layers as L
+from ..models import mamba2 as MB
+from ..models import hybrid as HY
+from ..models import vision as VI
+from ..models.config import ModelConfig
+from ..models.registry import get_model
+from ..train.optimizer import OptConfig
+from ..train.train_loop import make_train_step
+from ..train.elastic import state_axes
+
+
+@dataclass(frozen=True)
+class Shape:
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train", 4_096, 256),
+    "prefill_32k": Shape("prefill", 32_768, 32),
+    "decode_32k": Shape("decode", 32_768, 128),
+    "long_500k": Shape("decode", 524_288, 1),
+}
+
+# long_500k requires sub-quadratic attention state: only the SSM and hybrid
+# archs run it (skip documented in DESIGN.md §6).
+LONG_CTX_ARCHS = ("mamba2-370m", "zamba2-7b")
+
+
+def cell_supported(arch: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and arch not in LONG_CTX_ARCHS:
+        return False, ("pure full-attention arch: a 500k dense KV decode "
+                       "cache is memory-infeasible without sub-quadratic "
+                       "attention (DESIGN.md §6)")
+    return True, ""
+
+
+def cell_config(arch: str, shape_name: str, overrides: dict | None = None
+                ) -> ModelConfig:
+    cfg = full_config(arch)
+    shape = SHAPES[shape_name]
+    kw: dict[str, Any] = dict(attn_impl="blocked")
+    if shape.kind in ("prefill", "decode"):
+        kw.update(max_cache_len=shape.seq_len, remat="none", microbatches=1)
+    if overrides:
+        kw.update(overrides)
+    return cfg.with_(**kw)
+
+
+def rules_for_cell(cfg: ModelConfig, shape: Shape, mesh: Mesh,
+                   base: ShardingRules = ShardingRules()) -> ShardingRules:
+    rules = arch_rules(base, mesh, num_heads=cfg.num_heads,
+                       num_kv_heads=cfg.num_kv_heads, d_ff=cfg.d_ff,
+                       vocab=cfg.vocab_size, num_experts=cfg.num_experts)
+    if cfg.family in ("ssm", "hybrid"):
+        if cfg.ssm_nheads % max(mesh.shape.get("model", 1), 1):
+            rules = replace(rules, ssm_heads=None)
+        if cfg.d_inner % max(mesh.shape.get("model", 1), 1):
+            rules = replace(rules, mlp=None)
+    if shape.kind in ("prefill", "decode"):
+        if rules.cache_seq is None and rules.kv_heads is None:
+            rules = replace(rules, cache_seq="model")
+    if shape.global_batch == 1:
+        # batch unshardable; put the idle data axis on the cache seq dim
+        cache_seq = ("data",) if rules.cache_seq is None else ("data", "model")
+        rules = replace(rules, batch=None, cache_seq=cache_seq)
+    else:
+        # batch must divide the dp axes product
+        dp = rules.batch if isinstance(rules.batch, tuple) else (rules.batch,)
+        n = int(np.prod([mesh.shape[a] for a in dp if a]))
+        if shape.global_batch % max(n, 1):
+            rules = replace(rules, batch="data")
+    if cfg.seq_parallel:
+        rules = replace(rules, seq="model")
+    return adapt_rules_for_mesh(rules, mesh)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct builders
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_structs(cfg: ModelConfig, shape: Shape) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = dict(tokens=_sds((b, s), jnp.int32),
+               targets=_sds((b, s), jnp.int32),
+               loss_mask=_sds((b, s), jnp.float32))
+    if cfg.family == "encdec":
+        out["frames"] = _sds((b, cfg.n_frames, cfg.d_model), jnp.dtype(cfg.dtype))
+    if cfg.family == "vlm":
+        out["patches"] = _sds((b, cfg.n_patches, cfg.vision_dim),
+                              jnp.dtype(cfg.dtype))
+    return out
+
+
+def batch_axes(cfg: ModelConfig) -> dict:
+    out = dict(tokens=("batch", None), targets=("batch", None),
+               loss_mask=("batch", None))
+    if cfg.family == "encdec":
+        out["frames"] = ("batch", None, None)
+    if cfg.family == "vlm":
+        out["patches"] = ("batch", None, None)
+    return out
+
+
+def decode_state_structs(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in ("dense", "moe"):
+        return jax.eval_shape(lambda: L.init_kv_cache(cfg, batch, max_len))
+    if cfg.family == "ssm":
+        return jax.eval_shape(lambda: MB.init_mamba_state(cfg, batch))
+    if cfg.family == "hybrid":
+        return jax.eval_shape(lambda: HY.init_state(cfg, batch, max_len))
+    if cfg.family == "encdec":
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return dict(
+            kv=jax.eval_shape(lambda: L.init_kv_cache(cfg, batch, max_len)),
+            cross_kv=dict(
+                k=_sds((cfg.num_layers, batch, kv, cfg.n_frames, hd),
+                       jnp.dtype(cfg.dtype)),
+                v=_sds((cfg.num_layers, batch, kv, cfg.n_frames, hd),
+                       jnp.dtype(cfg.dtype))))
+    if cfg.family == "vlm":
+        base = jax.eval_shape(lambda: VI.init_cache(cfg, batch, max_len))
+        ce = cfg.cross_attn_every
+        n_groups = cfg.num_layers // ce
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        base["cross"] = dict(
+            k=_sds((n_groups, batch, kv, cfg.n_patches, hd),
+                   jnp.dtype(cfg.dtype)),
+            v=_sds((n_groups, batch, kv, cfg.n_patches, hd),
+                   jnp.dtype(cfg.dtype)))
+        return base
+    raise ValueError(cfg.family)
+
+
+_KV_AXES = dict(k=("layers", "batch", "kv_heads", "cache_seq", "head_dim"),
+                v=("layers", "batch", "kv_heads", "cache_seq", "head_dim"))
+_CROSS_AXES = dict(k=("layers", "batch", "kv_heads", "frames", "head_dim"),
+                   v=("layers", "batch", "kv_heads", "frames", "head_dim"))
+
+
+def decode_state_axes(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return dict(_KV_AXES)
+    if cfg.family == "ssm":
+        return MB.mamba_state_axes()
+    if cfg.family == "hybrid":
+        return dict(mamba=MB.mamba_state_axes(), kv=dict(_KV_AXES))
+    if cfg.family == "encdec":
+        return dict(kv=dict(_KV_AXES), cross_kv=dict(_CROSS_AXES))
+    if cfg.family == "vlm":
+        six = ("layers", None, "batch", "kv_heads", "cache_seq", "head_dim")
+        return dict(self_k=six, self_v=six,
+                    tail_k=_KV_AXES["k"], tail_v=_KV_AXES["v"],
+                    cross=dict(_CROSS_AXES))
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    cfg: ModelConfig
+    rules: ShardingRules
+    fn: Any
+    args: tuple
+    in_shardings: Any
+    donate_argnums: tuple
+
+
+def _shard(tree_ax, mesh, rules):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_spec(tree_ax, rules))
+
+
+def make_cell(arch: str, shape_name: str, mesh: Mesh,
+              overrides: dict | None = None,
+              base_rules: ShardingRules = ShardingRules(),
+              shape_override: Shape | None = None) -> Cell:
+    shape = shape_override or SHAPES[shape_name]
+    cfg = cell_config(arch, shape_name, overrides)
+    rules = rules_for_cell(cfg, shape, mesh, base_rules)
+    api = get_model(cfg, mesh, rules)
+
+    params_struct = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    p_axes = api.axes()
+    p_sh = _shard(p_axes, mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig()
+        step = make_train_step(api, opt_cfg)
+        state_struct = dict(
+            params=params_struct,
+            opt=dict(mu=params_struct, nu=params_struct,
+                     step=_sds((), jnp.int32), skipped=_sds((), jnp.int32)))
+        st_axes = state_axes(api)
+        st_sh = _shard(st_axes, mesh, rules)
+        b_struct = batch_structs(cfg, shape)
+        b_sh = _shard(batch_axes(cfg), mesh, rules)
+        return Cell(arch, shape_name, cfg, rules, step,
+                    (state_struct, b_struct), (st_sh, b_sh), (0,))
+
+    if shape.kind == "prefill":
+        b_struct = batch_structs(cfg, shape)
+        b_struct.pop("targets"), b_struct.pop("loss_mask")
+        bax = batch_axes(cfg)
+        bax.pop("targets"), bax.pop("loss_mask")
+        b_sh = _shard(bax, mesh, rules)
+        fn = lambda p, b: api.prefill(p, b)
+        return Cell(arch, shape_name, cfg, rules, fn,
+                    (params_struct, b_struct), (p_sh, b_sh), ())
+
+    # decode
+    b = shape.global_batch
+    state_struct = decode_state_structs(cfg, b, shape.seq_len)
+    st_sh = _shard(decode_state_axes(cfg), mesh, rules)
+    tok_struct = _sds((b,), jnp.int32)
+    tok_sh = NamedSharding(mesh, rules.spec("batch"))
+    idx_struct = _sds((), jnp.int32)
+    fn = lambda p, tok, st, i: api.decode_step(p, tok, st, i)
+    return Cell(arch, shape_name, cfg, rules, fn,
+                (params_struct, tok_struct, state_struct, idx_struct),
+                (p_sh, tok_sh, st_sh, None), (2,))

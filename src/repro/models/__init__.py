@@ -1,0 +1,6 @@
+"""Model zoo: dense GQA transformers, MoE (EP), Mamba2 SSD, Zamba2 hybrid,
+Whisper enc-dec, Llama-3.2-Vision — unified behind registry.get_model."""
+from .config import ModelConfig
+from .registry import get_model, ModelApi, analytic_param_count
+
+__all__ = ["ModelConfig", "get_model", "ModelApi", "analytic_param_count"]

@@ -1,0 +1,126 @@
+"""Unified model configuration covering all assigned architecture families."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 256
+    vocab_size: int = 256
+    head_dim: int | None = None
+    # attention flavour
+    qk_norm: bool = False        # qwen3
+    attn_bias: bool = False      # qwen2 QKV bias
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    use_layernorm: bool = False  # whisper/stablelm use LayerNorm, not RMSNorm
+    parallel_residual: bool = False
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 128
+    ssm_conv: int = 4
+    ssm_groups: int = 1
+    # hybrid (zamba2): a shared attention block every attn_every layers
+    attn_every: int = 0
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    n_frames: int = 0            # stubbed conv-frontend output length
+    max_target_len: int = 448
+    # vision-language (llama-3.2-vision)
+    cross_attn_every: int = 0
+    n_patches: int = 0
+    vision_dim: int = 0
+    # numerics & execution
+    dtype: str = "bfloat16"      # activation/compute dtype
+    param_dtype: str = "float32"
+    attn_impl: str = "ref"       # ref | pallas | interpret
+    remat: str = "full"          # none | full | dots
+    scan_layers: bool = True
+    # distribution/perf knobs (hillclimb levers)
+    seq_parallel: bool = False   # sequence-parallel inter-block carry
+    microbatches: int = 1        # gradient-accumulation splits in train_step
+    unroll_microbatches: bool = False  # python-loop accumulation (cost runs)
+    # serving
+    max_cache_len: int = 0
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def d_inner(self) -> int:     # SSM inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def _mamba_layer_params(self) -> int:
+        d, di = self.d_model, self.d_inner
+        n, h = self.ssm_state, self.ssm_nheads
+        g, dc = self.ssm_groups, self.ssm_conv
+        return (d * (2 * di + 2 * g * n + h) + 3 * h
+                + dc * (di + 2 * g * n) + (di + 2 * g * n)
+                + di + di * d)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6ND roofline and sanity checks)."""
+        d, f, v, hd = self.d_model, self.d_ff, self.vocab_size, self.resolved_head_dim
+        h, kv = self.num_heads, self.num_kv_heads
+        attn = d * hd * (h + 2 * kv) + h * hd * d
+        if self.attn_bias:
+            attn += hd * (h + 2 * kv)
+        if self.qk_norm:
+            attn += 2 * hd
+        mlp = 3 * d * f
+        per_layer = 0
+        n_attn_layers = self.num_layers
+        if self.family == "dense":
+            per_layer = attn + mlp + 2 * d
+        elif self.family == "moe":
+            per_layer = attn + self.num_experts * mlp + d * self.num_experts + 2 * d
+        elif self.family == "ssm":
+            per_layer = self._mamba_layer_params() + d  # + input norm
+        elif self.family == "hybrid":
+            mamba = self._mamba_layer_params() + d
+            shared = attn + mlp + 2 * d
+            emb_h = v * d * (1 if self.tie_embeddings else 2)
+            return self.num_layers * mamba + shared + emb_h + d
+        elif self.family == "encdec":
+            enc = self.encoder_layers * (attn + 2 * d * f + 3 * d)
+            dec = self.num_layers * (2 * attn + 2 * d * f + 4 * d)
+            return enc + dec + v * d + (self.n_frames + self.max_target_len) * d + 2 * d
+        elif self.family == "vlm":
+            n_cross = self.num_layers // max(self.cross_attn_every, 1)
+            cross = attn + 2 * d  # cross-attn + gates
+            return (self.num_layers * (attn + mlp + 2 * d) + n_cross * cross
+                    + v * d + self.vision_dim * d + d)
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.num_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE uses top-k of experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        full = self.param_count()
+        inactive = (self.num_experts - self.experts_per_token) * 3 * d * f
+        return full - self.num_layers * inactive

@@ -1,0 +1,202 @@
+"""Zamba2-style hybrid LM: Mamba2 backbone + a *shared* attention block
+(arXiv:2411.15242).
+
+Structure: ``num_layers`` Mamba2 blocks; after every ``attn_every``-th block
+the single shared transformer block (full GQA attention + SwiGLU MLP, one
+parameter set reused at every invocation) runs on the hidden state. For
+num_layers=81, attn_every=6 that is 13 shared-attention invocations plus a
+3-layer Mamba tail.
+
+Scan structure: outer ``lax.scan`` over groups, inner ``lax.scan`` over the
+``attn_every`` Mamba blocks of each group — the shared block's params ride
+in the closure (scan-invariant), so HLO stays O(1) in depth. Each shared
+invocation owns its own KV cache slice (stacked on the group axis) because
+it sees the same token positions at a different depth.
+
+Deviations from the released Zamba2 noted in DESIGN.md: per-invocation LoRA
+deltas on the shared block and the concat-with-embedding input are omitted
+(weight sharing and placement are the architecture's load-bearing ideas).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from . import mamba2 as M
+from .transformer import init_block as init_attn_block, \
+    block_axes as attn_block_axes, _apply_block as apply_attn_block, \
+    _stack_axes
+from ..dist.sharding import ShardingRules, constrain
+
+
+def _split(cfg: ModelConfig):
+    g = cfg.attn_every
+    n_groups = cfg.num_layers // g
+    tail = cfg.num_layers - n_groups * g
+    return g, n_groups, tail
+
+
+def init_params(key, cfg: ModelConfig):
+    g, n_groups, tail = _split(cfg)
+    kE, kH, kS, kL = jax.random.split(key, 4)
+    lkeys = jax.random.split(kL, cfg.num_layers)
+    mamba = jax.vmap(lambda k: dict(ln=L.norm_init(cfg),
+                                    mamba=M.mamba_init(k, cfg)))(lkeys)
+    grouped = jax.tree.map(
+        lambda t: t[: n_groups * g].reshape((n_groups, g) + t.shape[1:]),
+        mamba)
+    tail_p = jax.tree.map(lambda t: t[n_groups * g:], mamba)
+    p = dict(
+        embed=L.embed_init(kE, cfg),
+        groups=grouped,
+        tail=tail_p,
+        shared=init_attn_block(kS, cfg),
+        ln_f=L.norm_init(cfg),
+    )
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.embed_init(kH, cfg)
+    return p
+
+
+def param_axes(cfg: ModelConfig):
+    mamba_axes = dict(ln=L.norm_axes(cfg), mamba=M.mamba_axes(cfg))
+    a = dict(
+        embed=L.embed_axes(),
+        groups=_stack_axes(_stack_axes(mamba_axes), "layers"),
+        tail=_stack_axes(mamba_axes),
+        shared=attn_block_axes(cfg),
+        ln_f=L.norm_axes(cfg),
+    )
+    if not cfg.tie_embeddings:
+        a["unembed"] = L.embed_axes()
+    return a
+
+
+def init_state(cfg: ModelConfig, batch: int, max_cache_len: int):
+    """Decode state: Mamba states for all layers + per-invocation KV caches."""
+    g, n_groups, tail = _split(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return dict(
+        mamba=M.init_mamba_state(cfg, batch),
+        kv=dict(k=jnp.zeros((n_groups, batch, kv, max_cache_len, hd),
+                            jnp.dtype(cfg.dtype)),
+                v=jnp.zeros((n_groups, batch, kv, max_cache_len, hd),
+                            jnp.dtype(cfg.dtype))),
+    )
+
+
+def _mamba_scan(x, stack, cfg, rules, states=None):
+    """Inner scan over stacked mamba blocks; states optional (decode)."""
+    if states is None:
+        def body(carry, bp):
+            y, _ = M.mamba_block(L.apply_norm(carry, bp["ln"], cfg),
+                                 bp["mamba"], cfg, rules)
+            return constrain(carry + y, rules, "batch", "seq", "act_embed"), None
+        body = L.maybe_remat(body, cfg)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, stack)
+        else:
+            n = jax.tree.leaves(stack)[0].shape[0]
+            for i in range(n):
+                bp = jax.tree.map(lambda t: t[i], stack)
+                x, _ = body(x, bp)
+        return x, None
+
+    def body(carry, inp):
+        bp, st = inp
+        y, ns = M.mamba_block(L.apply_norm(carry, bp["ln"], cfg),
+                              bp["mamba"], cfg, rules, state=st)
+        return carry + y, ns
+    x, new_states = L.scan_or_unroll(body, x, (stack, states),
+                                     cfg.scan_layers)
+    return x, new_states
+
+
+def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
+            state=None, cache_index=None, mesh=None):
+    g, n_groups, tail = _split(cfg)
+    x = L.apply_embed(tokens, params["embed"], cfg, rules)
+    s = tokens.shape[1]
+    base = 0 if cache_index is None else cache_index
+    positions = base + jnp.arange(s, dtype=jnp.int32)
+
+    def slice_layers(tree, lo, hi):
+        return jax.tree.map(lambda t: t[lo:hi], tree)
+
+    if state is None:
+        def group_body(carry, gp):
+            y, _ = _mamba_scan(carry, gp, cfg, rules)
+            y, _ = apply_attn_block(y, params["shared"], cfg, rules,
+                                    positions=positions, mesh=mesh)
+            return y, None
+        group_body = L.maybe_remat(group_body, cfg)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(group_body, x, params["groups"])
+        else:
+            for i in range(n_groups):
+                gp = jax.tree.map(lambda t: t[i], params["groups"])
+                x, _ = group_body(x, gp)
+        if tail:
+            x, _ = _mamba_scan(x, params["tail"], cfg, rules)
+        new_state = None
+    else:
+        mstates = state["mamba"]
+        main = jax.tree.map(
+            lambda t: t[: n_groups * g].reshape((n_groups, g) + t.shape[1:]),
+            mstates)
+        tail_st = jax.tree.map(lambda t: t[n_groups * g:], mstates)
+
+        def group_body(carry, inp):
+            gp, gst, ck, cv = inp
+            y, ns = _mamba_scan(carry, gp, cfg, rules, states=gst)
+            y, nc = apply_attn_block(y, params["shared"], cfg, rules,
+                                     positions=positions,
+                                     cache=dict(k=ck, v=cv),
+                                     cache_index=cache_index, mesh=mesh)
+            return y, (ns, nc["k"], nc["v"])
+        x, (new_main, nk, nv) = L.scan_or_unroll(
+            group_body, x, (params["groups"], main,
+                            state["kv"]["k"], state["kv"]["v"]),
+            cfg.scan_layers)
+        if tail:
+            x, new_tail = _mamba_scan(x, params["tail"], cfg, rules,
+                                      states=tail_st)
+        else:
+            new_tail = tail_st
+        flat_main = jax.tree.map(
+            lambda t: t.reshape((n_groups * g,) + t.shape[2:]), new_main)
+        new_mamba = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), flat_main, new_tail)
+        new_state = dict(mamba=new_mamba, kv=dict(k=nk, v=nv))
+
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    return x, new_state
+
+
+def _logits(params, hidden, cfg, rules):
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.apply_unembed(hidden, table, cfg, rules)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules, mesh=None):
+    hidden, _ = forward(params, batch["tokens"], cfg, rules, mesh=mesh)
+    return L.softmax_xent(_logits(params, hidden, cfg, rules),
+                          batch["targets"], batch["loss_mask"])
+
+
+def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
+            max_cache_len: int, mesh=None):
+    b, s = tokens.shape
+    state = init_state(cfg, b, max_cache_len)
+    hidden, state = forward(params, tokens, cfg, rules, state=state,
+                            cache_index=0, mesh=mesh)
+    return _logits(params, hidden[:, -1:], cfg, rules)[:, 0], state, s
+
+
+def decode_step(params, token, state, index, cfg: ModelConfig,
+                rules: ShardingRules, mesh=None):
+    hidden, state = forward(params, token[:, None], cfg, rules, state=state,
+                            cache_index=index, mesh=mesh)
+    return _logits(params, hidden, cfg, rules)[:, 0], state

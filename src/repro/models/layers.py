@@ -1,0 +1,353 @@
+"""Common model layers (pure JAX, explicit param pytrees).
+
+Every init function has a sibling ``*_axes`` returning the same tree
+structure with logical-axis tuples for the sharding rules (dist/sharding).
+Compute follows the mixed-precision convention: params live in
+``param_dtype`` (f32 master), are cast to ``dtype`` (bf16) at use, and
+reductions (softmax, norms, loss) run in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import flash_attention
+from .config import ModelConfig
+from ..dist.sharding import ShardingRules, constrain
+
+Params = Any  # nested dict pytree
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, in_axis_size, dtype):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    std = in_axis_size ** -0.5
+    return (std * jax.random.truncated_normal(key, -3, 3, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, with_bias: bool | None = None):
+    with_bias = cfg.use_layernorm if with_bias is None else with_bias
+    p = dict(scale=jnp.ones((cfg.d_model,), _pdtype(cfg)))
+    if with_bias:
+        p["bias"] = jnp.zeros((cfg.d_model,), _pdtype(cfg))
+    return p
+
+
+def norm_axes(cfg: ModelConfig, with_bias: bool | None = None):
+    with_bias = cfg.use_layernorm if with_bias is None else with_bias
+    a = dict(scale=("act_embed",))
+    if with_bias:
+        a["bias"] = ("act_embed",)
+    return a
+
+
+def apply_norm(x, p, cfg: ModelConfig, eps: float | None = None):
+    eps = cfg.norm_eps if eps is None else eps
+    xf = x.astype(jnp.float32)
+    if cfg.use_layernorm or "bias" in p:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32)
+        if "bias" in p:
+            y = y + p["bias"].astype(jnp.float32)
+    else:  # RMSNorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps):
+    """qk-norm: RMSNorm over the head_dim of (..., head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) or (S,)."""
+    b, s, h, d = x.shape
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, :, None].astype(jnp.float32) * freq[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]   # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / qkv-bias / RoPE / cross / cache)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    pd = _pdtype(cfg)
+    p = dict(
+        wq=dense_init(ks[0], (d, h, hd), d, pd),
+        wk=dense_init(ks[1], (d, kv, hd), d, pd),
+        wv=dense_init(ks[2], (d, kv, hd), d, pd),
+        wo=dense_init(ks[3], (h, hd, d), h * hd, pd),
+    )
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h, hd), pd)
+        p["bk"] = jnp.zeros((kv, hd), pd)
+        p["bv"] = jnp.zeros((kv, hd), pd)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), pd)
+        p["k_norm"] = jnp.ones((hd,), pd)
+    return p
+
+
+def attn_axes(cfg: ModelConfig):
+    a = dict(
+        wq=("embed", "heads", "head_dim"),
+        wk=("embed", "kv_heads", "head_dim"),
+        wv=("embed", "kv_heads", "head_dim"),
+        wo=("heads", "head_dim", "embed"),
+    )
+    if cfg.attn_bias:
+        a["bq"] = ("heads", "head_dim")
+        a["bk"] = ("kv_heads", "head_dim")
+        a["bv"] = ("kv_heads", "head_dim")
+    if cfg.qk_norm:
+        a["q_norm"] = ("head_dim",)
+        a["k_norm"] = ("head_dim",)
+    return a
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  n_layers: int | None = None):
+    """Stacked (layers-leading) KV cache for the decode path."""
+    n_layers = cfg.num_layers if n_layers is None else n_layers
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    shape = (n_layers, batch, kv, max_len, hd)
+    return dict(k=jnp.zeros(shape, _dtype(cfg)),
+                v=jnp.zeros(shape, _dtype(cfg)))
+
+
+def kv_cache_axes():
+    return dict(k=("layers", "batch", "kv_heads", "cache_seq", "head_dim"),
+                v=("layers", "batch", "kv_heads", "cache_seq", "head_dim"))
+
+
+def project_kv(src, p, cfg: ModelConfig, rules: ShardingRules):
+    """Precompute (kh, vh) in (B, KVH, S, Dh) layout — cross-attention K/V
+    never change during decode, so serving computes them once."""
+    sc = src.astype(_dtype(cfg))
+    k = jnp.einsum("bsd,dhk->bshk", sc, p["wk"].astype(_dtype(cfg)))
+    v = jnp.einsum("bsd,dhk->bshk", sc, p["wv"].astype(_dtype(cfg)))
+    if cfg.attn_bias:
+        k = k + p["bk"].astype(_dtype(cfg))
+        v = v + p["bv"].astype(_dtype(cfg))
+    if cfg.qk_norm:
+        k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
+    k = constrain(k, rules, "batch", None, "kv_heads", None)
+    v = constrain(v, rules, "batch", None, "kv_heads", None)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def apply_attention(x, p, cfg: ModelConfig, rules: ShardingRules, *,
+                    positions=None, causal: bool = True,
+                    kv_src=None, cache=None, cache_index=None,
+                    use_rope: bool = True, kv_precomputed=None):
+    """Self- or cross-attention with optional KV cache.
+
+    x: (B, S, D). kv_src: encoder output for cross-attention (no rope, no
+    causal). kv_precomputed: (kh, vh) from project_kv (skips projections).
+    cache: dict(k, v) of (B, KVH, Lmax, Dh) for *this layer* plus
+    cache_index = current length; returns (out, updated_cache).
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    xc = x.astype(_dtype(cfg))
+
+    q = jnp.einsum("bsd,dhk->bshk", xc, p["wq"].astype(_dtype(cfg)))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(_dtype(cfg))
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
+
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    if use_rope and kv_src is None and kv_precomputed is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    q = constrain(q, rules, "batch", None, "heads", None)
+    qh = q.transpose(0, 2, 1, 3)
+
+    if kv_precomputed is not None:
+        kh, vh = kv_precomputed
+    else:
+        src = xc if kv_src is None else kv_src.astype(_dtype(cfg))
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(_dtype(cfg)))
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(_dtype(cfg)))
+        if cfg.attn_bias:
+            k = k + p["bk"].astype(_dtype(cfg))
+            v = v + p["bv"].astype(_dtype(cfg))
+        if cfg.qk_norm:
+            k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
+        if use_rope and kv_src is None:
+            k = apply_rope(k, positions, cfg.rope_theta)
+        k = constrain(k, rules, "batch", None, "kv_heads", None)
+        v = constrain(v, rules, "batch", None, "kv_heads", None)
+        kh = k.transpose(0, 2, 1, 3)
+        vh = v.transpose(0, 2, 1, 3)
+
+    kv_len = None
+    q_offset = 0
+    new_cache = None
+    if cache is not None:
+        # decode/prefill-into-cache: write new keys at cache_index
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], kh, cache_index, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vh, cache_index, axis=2)
+        new_cache = dict(k=ck, v=cv)
+        kh, vh = ck, cv
+        kv_len = cache_index + s
+        q_offset = cache_index
+
+    out = flash_attention(qh, kh, vh, causal=causal and kv_src is None,
+                          kv_len=kv_len, q_offset=q_offset,
+                          impl=cfg.attn_impl, unroll=not cfg.scan_layers)
+    out = out.transpose(0, 2, 1, 3)  # (B, S, H, Dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(_dtype(cfg)))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU for LM family, GELU for whisper)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, gated: bool = True):
+    d, f = cfg.d_model, cfg.d_ff
+    pd = _pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    if gated:
+        return dict(w_gate=dense_init(ks[0], (d, f), d, pd),
+                    w_up=dense_init(ks[1], (d, f), d, pd),
+                    w_down=dense_init(ks[2], (f, d), f, pd))
+    return dict(w_in=dense_init(ks[0], (d, f), d, pd),
+                b_in=jnp.zeros((f,), pd),
+                w_out=dense_init(ks[1], (f, d), f, pd),
+                b_out=jnp.zeros((d,), pd))
+
+
+def mlp_axes(gated: bool = True):
+    if gated:
+        return dict(w_gate=("embed", "mlp"), w_up=("embed", "mlp"),
+                    w_down=("mlp", "embed"))
+    return dict(w_in=("embed", "mlp"), b_in=("mlp",),
+                w_out=("mlp", "embed"), b_out=("act_embed",))
+
+
+def apply_mlp(x, p, cfg: ModelConfig, rules: ShardingRules):
+    xc = x.astype(_dtype(cfg))
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", xc, p["w_gate"].astype(_dtype(cfg)))
+        u = jnp.einsum("bsd,df->bsf", xc, p["w_up"].astype(_dtype(cfg)))
+        h = jax.nn.silu(g) * u
+        h = constrain(h, rules, "batch", None, "mlp")
+        return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(_dtype(cfg)))
+    h = jnp.einsum("bsd,df->bsf", xc, p["w_in"].astype(_dtype(cfg)))
+    h = jax.nn.gelu(h + p["b_in"].astype(_dtype(cfg)))
+    h = constrain(h, rules, "batch", None, "mlp")
+    return (jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(_dtype(cfg)))
+            + p["b_out"].astype(_dtype(cfg)))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig, vocab: int | None = None):
+    v = vocab if vocab else cfg.vocab_size
+    return (jax.random.normal(key, (v, cfg.d_model)) * 0.02).astype(_pdtype(cfg))
+
+
+def embed_axes():
+    return ("vocab", "embed")
+
+
+def apply_embed(tokens, table, cfg: ModelConfig, rules: ShardingRules):
+    x = jnp.take(table.astype(_dtype(cfg)), tokens, axis=0)
+    return constrain(x, rules, "batch", "seq", "act_embed")
+
+
+def apply_unembed(x, table, cfg: ModelConfig, rules: ShardingRules):
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(_dtype(cfg)),
+                        table.astype(_dtype(cfg)))
+    seq_ax = "logits_seq" if (rules.vocab is None and logits.shape[1] > 1) \
+        else None
+    return constrain(logits, rules, "batch", seq_ax, "vocab")
+
+
+def softmax_xent(logits, targets, mask):
+    """Mean masked cross-entropy (nats), f32 reductions, plus z-loss metric."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    tgt = jnp.take_along_axis(lf, targets[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    nll = (lse - tgt) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    z = (jnp.square(lse) * mask).sum() / denom
+    return loss, dict(loss=loss, z_loss=z, tokens=mask.sum())
+
+
+# ---------------------------------------------------------------------------
+# Scan-or-unroll (cost-mode compiles unroll so HloCostAnalysis, which counts
+# while bodies ONCE, sees every layer)
+# ---------------------------------------------------------------------------
+
+def scan_or_unroll(body, carry, xs, scan: bool):
+    """lax.scan when ``scan`` else a python loop with stacked outputs."""
+    if scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda t: t[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# Remat policy
+# ---------------------------------------------------------------------------
+
+def maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # full

@@ -1,0 +1,345 @@
+"""Mamba2 / SSD (state-space duality) layer and LM (arXiv:2405.21060).
+
+The SSD chunked algorithm is TPU-native by construction — it replaces the
+sequential selective scan with dense matmuls over chunks:
+
+  within chunk (length Q):  Y_intra = ((C B^T) . L_causal-decay) (dt x)
+  chunk summary state:      h_c     = sum_t decay_to_end(t) B_t (dt x)_t
+  across chunks:            H_k     = exp(sum a)_k H_{k-1} + h_c   (lax.scan)
+  inter contribution:       Y_inter = decay_from_start(t) C_t H_{k-1}
+
+All einsums batch over (B, heads); heads shard over the TP axis so the only
+cross-shard communication is the in/out projections' embed dim (FSDP).
+Decode keeps O(1) state per layer: conv tail + (H, N, P) SSM state.
+
+A naive O(S^2)-free sequential recurrence (``ssd_sequential_ref``) is the
+correctness oracle for the chunked path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from ..dist.sharding import ShardingRules, constrain
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    g, dc = cfg.ssm_groups, cfg.ssm_conv
+    pd = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return dict(
+        w_z=L.dense_init(ks[0], (d, di), d, pd),
+        w_x=L.dense_init(ks[1], (d, di), d, pd),
+        w_B=L.dense_init(ks[2], (d, g * n), d, pd),
+        w_C=L.dense_init(ks[3], (d, g * n), d, pd),
+        w_dt=L.dense_init(ks[4], (d, h), d, pd),
+        dt_bias=jnp.zeros((h,), pd) + jnp.log(jnp.expm1(0.01)).astype(pd),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, h)).astype(pd),
+        D_skip=jnp.ones((h,), pd),
+        conv_x=L.dense_init(ks[5], (dc, di), dc, pd),
+        conv_B=L.dense_init(ks[6], (dc, g * n), dc, pd),
+        conv_C=L.dense_init(ks[7], (dc, g * n), dc, pd),
+        conv_bx=jnp.zeros((di,), pd),
+        conv_bB=jnp.zeros((g * n,), pd),
+        conv_bC=jnp.zeros((g * n,), pd),
+        gate_norm=jnp.ones((di,), pd),
+        w_out=L.dense_init(ks[0], (di, d), di, pd),
+    )
+
+
+def mamba_axes(cfg: ModelConfig):
+    return dict(
+        w_z=("embed", "mlp"), w_x=("embed", "mlp"),
+        w_B=("embed", "state"), w_C=("embed", "state"),
+        w_dt=("embed", "ssm_heads"),
+        dt_bias=("ssm_heads",), A_log=("ssm_heads",), D_skip=("ssm_heads",),
+        conv_x=(None, "mlp"), conv_B=(None, "state"), conv_C=(None, "state"),
+        conv_bx=("mlp",), conv_bB=("state",), conv_bC=("state",),
+        gate_norm=("mlp",),
+        w_out=("mlp", "embed"),
+    )
+
+
+def mamba_param_count(cfg: ModelConfig) -> int:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads
+    g, dc = cfg.ssm_groups, cfg.ssm_conv
+    return (d * (2 * di + 2 * g * n + h)            # projections
+            + 3 * h                                  # dt_bias, A_log, D
+            + dc * (di + 2 * g * n)                  # conv weights
+            + (di + 2 * g * n)                       # conv biases
+            + di                                     # gate norm
+            + di * d)                                # out proj
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (width dc), with optional carried tail for decode.
+# ---------------------------------------------------------------------------
+
+def _causal_conv(u, w, b, tail=None):
+    """u: (B, S, C); w: (dc, C); tail: (B, dc-1, C) state or None.
+    Returns (out (B,S,C), new_tail)."""
+    dc = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], dc - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)            # (B, S+dc-1, C)
+    out = jnp.zeros_like(u)
+    for i in range(dc):
+        out = out + ext[:, i:i + u.shape[1]] * w[i][None, None, :]
+    out = out + b[None, None, :]
+    new_tail = ext[:, -(dc - 1):] if dc > 1 else tail
+    return jax.nn.silu(out), new_tail
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x, dt, a, Bm, Cm, chunk: int, h_init=None):
+    """SSD over chunks.
+
+    x:  (B, S, H, P) f32     dt: (B, S, H) f32 (already softplus'd)
+    a:  (H,) f32 negative    Bm, Cm: (B, S, H, N) f32
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xdt = x * dt[..., None]                             # (B,S,H,P)
+    la = dt * a[None, None, :]                          # log decay per step
+
+    def resh(t):
+        return t.reshape(b, nc, q, *t.shape[2:])
+
+    xdt_c, la_c, B_c, C_c = resh(xdt), resh(la), resh(Bm), resh(Cm)
+    cum = jnp.cumsum(la_c, axis=2)                      # (B,nc,Q,H)
+    seg_sum = cum[:, :, -1]                             # (B,nc,H) total decay
+
+    # Intra-chunk: (C B^T . L) xdt, causal with decay L[i,j]=exp(cum_i-cum_j)
+    gmat = jnp.einsum("bcqhn,bckhn->bchqk", C_c, B_c)
+    ldiff = cum.transpose(0, 1, 3, 2)[..., :, None] - \
+            cum.transpose(0, 1, 3, 2)[..., None, :]     # (B,nc,H,Q,Q)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(causal[None, None, None], jnp.exp(ldiff), 0.0)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", gmat * lmat, xdt_c)
+
+    # Chunk summary states: decay from position t to chunk end.
+    decay_to_end = jnp.exp(seg_sum[:, :, None, :] - cum)  # (B,nc,Q,H)
+    h_c = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", B_c, decay_to_end, xdt_c)
+
+    # Inter-chunk recurrence.
+    if h_init is None:
+        h_init = jnp.zeros((b, h, n, p), x.dtype)
+
+    def step(hprev, inp):
+        hc, seg = inp                                   # (B,H,N,P), (B,H)
+        hnew = hprev * jnp.exp(seg)[:, :, None, None] + hc
+        return hnew, hprev
+
+    seg_t = seg_sum.transpose(1, 0, 2)                  # (nc,B,H)
+    hc_t = h_c.transpose(1, 0, 2, 3, 4)                 # (nc,B,H,N,P)
+    h_last, h_prevs = jax.lax.scan(step, h_init, (hc_t, seg_t))
+
+    decay_from_start = jnp.exp(cum)                     # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bcqh,cbhnp->bcqhp",
+                         C_c, decay_from_start, h_prevs)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, h_last
+
+
+def ssd_sequential_ref(x, dt, a, Bm, Cm, h_init=None):
+    """Position-at-a-time recurrence oracle (slow; tests only)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    if h_init is None:
+        h_init = jnp.zeros((b, h, n, p), x.dtype)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp                            # (B,H,P),(B,H),(B,H,N)
+        decay = jnp.exp(dtt * a[None, :])                # (B,H)
+        hnew = hprev * decay[:, :, None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, hnew)
+        return hnew, yt
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2, 3), Cm.transpose(1, 0, 2, 3))
+    h_last, ys = jax.lax.scan(step, h_init, xs)
+    return ys.transpose(1, 0, 2, 3), h_last
+
+
+# ---------------------------------------------------------------------------
+# Block forward (train/prefill) and single-token decode
+# ---------------------------------------------------------------------------
+
+def _gated_norm(y, z, scale, eps):
+    yz = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(yz), axis=-1, keepdims=True)
+    return yz * jax.lax.rsqrt(ms + eps) * scale
+
+
+def mamba_block(x, p, cfg: ModelConfig, rules: ShardingRules, *,
+                state=None):
+    """x: (B, S, D). state: decode dict or None. Returns (y, new_state)."""
+    b, s, d = x.shape
+    h, n, pdim = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_headdim
+    g = cfg.ssm_groups
+    dt32 = jnp.float32
+    xc = x.astype(jnp.dtype(cfg.dtype))
+
+    z = jnp.einsum("bsd,de->bse", xc, p["w_z"].astype(xc.dtype))
+    xi = jnp.einsum("bsd,de->bse", xc, p["w_x"].astype(xc.dtype))
+    Br = jnp.einsum("bsd,de->bse", xc, p["w_B"].astype(xc.dtype))
+    Cr = jnp.einsum("bsd,de->bse", xc, p["w_C"].astype(xc.dtype))
+    dt = jnp.einsum("bsd,dh->bsh", xc, p["w_dt"].astype(xc.dtype))
+
+    tails = state or {}
+    xi, t_x = _causal_conv(xi, p["conv_x"].astype(xc.dtype),
+                           p["conv_bx"].astype(xc.dtype), tails.get("conv_x"))
+    Br, t_B = _causal_conv(Br, p["conv_B"].astype(xc.dtype),
+                           p["conv_bB"].astype(xc.dtype), tails.get("conv_B"))
+    Cr, t_C = _causal_conv(Cr, p["conv_C"].astype(xc.dtype),
+                           p["conv_bC"].astype(xc.dtype), tails.get("conv_C"))
+
+    xi = constrain(xi, rules, "batch", None, "mlp")
+    dtf = jax.nn.softplus(dt.astype(dt32) +
+                          p["dt_bias"].astype(dt32)[None, None])
+    a = -jnp.exp(p["A_log"].astype(dt32))
+
+    xh = xi.astype(dt32).reshape(b, s, h, pdim)
+    Bh = jnp.repeat(Br.astype(dt32).reshape(b, s, g, n), h // g, axis=2)
+    Ch = jnp.repeat(Cr.astype(dt32).reshape(b, s, g, n), h // g, axis=2)
+
+    h0 = tails.get("ssm")
+    if state is not None and s == 1:
+        # decode: single recurrence step
+        y, h_last = ssd_sequential_ref(xh, dtf, a, Bh, Ch, h_init=h0)
+    else:
+        y, h_last = ssd_chunked(xh, dtf, a, Bh, Ch, cfg.ssm_chunk, h_init=h0)
+
+    y = y + xh * p["D_skip"].astype(dt32)[None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner).astype(xc.dtype)
+    y = _gated_norm(y.astype(dt32), z.astype(dt32),
+                    p["gate_norm"].astype(dt32), cfg.norm_eps).astype(xc.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(xc.dtype))
+    new_state = dict(conv_x=t_x, conv_B=t_B, conv_C=t_C, ssm=h_last) \
+        if state is not None else None
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, n_layers: int | None = None):
+    n_layers = cfg.num_layers if n_layers is None else n_layers
+    dc, di, gn = cfg.ssm_conv, cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+    dt = jnp.dtype(cfg.dtype)
+    return dict(
+        conv_x=jnp.zeros((n_layers, batch, dc - 1, di), dt),
+        conv_B=jnp.zeros((n_layers, batch, dc - 1, gn), dt),
+        conv_C=jnp.zeros((n_layers, batch, dc - 1, gn), dt),
+        ssm=jnp.zeros((n_layers, batch, cfg.ssm_nheads, cfg.ssm_state,
+                       cfg.ssm_headdim), jnp.float32),
+    )
+
+
+def mamba_state_axes():
+    return dict(conv_x=("layers", "batch", None, "mlp"),
+                conv_B=("layers", "batch", None, "state"),
+                conv_C=("layers", "batch", None, "state"),
+                ssm=("layers", "batch", "ssm_heads", "state", None))
+
+
+# ---------------------------------------------------------------------------
+# Full LM: embed -> scanned [norm + mamba + residual] -> norm -> logits
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    kE, kH, kL = jax.random.split(key, 3)
+    lkeys = jax.random.split(kL, cfg.num_layers)
+    blocks = jax.vmap(lambda k: dict(
+        ln=L.norm_init(cfg), mamba=mamba_init(k, cfg)))(lkeys)
+    p = dict(embed=L.embed_init(kE, cfg), blocks=blocks, ln_f=L.norm_init(cfg))
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.embed_init(kH, cfg)
+    return p
+
+
+def param_axes(cfg: ModelConfig):
+    from .transformer import _stack_axes
+    a = dict(embed=L.embed_axes(),
+             blocks=_stack_axes(dict(ln=L.norm_axes(cfg),
+                                     mamba=mamba_axes(cfg))),
+             ln_f=L.norm_axes(cfg))
+    if not cfg.tie_embeddings:
+        a["unembed"] = L.embed_axes()
+    return a
+
+
+def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
+            state=None):
+    x = L.apply_embed(tokens, params["embed"], cfg, rules)
+
+    if state is None:
+        def body(carry, bp):
+            y, _ = mamba_block(L.apply_norm(carry, bp["ln"], cfg),
+                               bp["mamba"], cfg, rules)
+            out = constrain(carry + y, rules, "batch", "seq", "act_embed")
+            return out, None
+        body = L.maybe_remat(body, cfg)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+        else:
+            for i in range(cfg.num_layers):
+                bp = jax.tree.map(lambda t: t[i], params["blocks"])
+                x, _ = body(x, bp)
+        new_state = None
+    else:
+        def body(carry, inp):
+            bp, st = inp
+            y, ns = mamba_block(L.apply_norm(carry, bp["ln"], cfg),
+                                bp["mamba"], cfg, rules, state=st)
+            return carry + y, ns
+        states_in = state
+        x, new_state = L.scan_or_unroll(
+            body, x, (params["blocks"],
+                      dict(conv_x=states_in["conv_x"],
+                           conv_B=states_in["conv_B"],
+                           conv_C=states_in["conv_C"],
+                           ssm=states_in["ssm"])), cfg.scan_layers)
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    return x, new_state
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules):
+    hidden, _ = forward(params, batch["tokens"], cfg, rules)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.apply_unembed(hidden, table, cfg, rules)
+    return L.softmax_xent(logits, batch["targets"], batch["loss_mask"])
+
+
+def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
+            max_cache_len: int = 0):
+    """Run the prompt, returning (last_logits, state, next_index). SSM state
+    is O(1); max_cache_len is ignored (kept for API parity)."""
+    b, s = tokens.shape
+    state = init_mamba_state(cfg, b)
+    hidden, state = forward(params, tokens, cfg, rules, state=state)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.apply_unembed(hidden[:, -1:], table, cfg, rules)
+    return logits[:, 0], state, s
+
+
+def decode_step(params, token, state, index, cfg: ModelConfig,
+                rules: ShardingRules):
+    hidden, state = forward(params, token[:, None], cfg, rules, state=state)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.apply_unembed(hidden, table, cfg, rules)
+    return logits[:, 0], state

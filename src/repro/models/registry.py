@@ -1,0 +1,110 @@
+"""Uniform model API over all architecture families.
+
+``get_model(cfg, mesh=None)`` returns a ModelApi with:
+  init(key) -> params                     axes() -> logical-axes pytree
+  loss(params, batch) -> (loss, metrics)  # batch dict is family-specific
+  prefill(params, batch) -> (logits, state, index)
+  decode_step(params, token, state, index) -> (logits, state)
+  batch_keys: which inputs the family consumes (tokens/frames/patches...)
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+
+from .config import ModelConfig
+from ..dist.sharding import ShardingRules, REPLICATED
+from . import transformer, mamba2, hybrid, encdec, vision
+
+
+@dataclass
+class ModelApi:
+    cfg: ModelConfig
+    rules: ShardingRules
+    mesh: Any
+    init: Callable
+    axes: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    batch_keys: tuple[str, ...]
+
+
+def get_model(cfg: ModelConfig, mesh=None,
+              rules: ShardingRules = REPLICATED) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return ModelApi(
+            cfg=cfg, rules=rules, mesh=mesh,
+            init=lambda key: transformer.init_params(key, cfg),
+            axes=lambda: transformer.param_axes(cfg),
+            loss=lambda p, b: transformer.loss_fn(p, b, cfg, rules, mesh),
+            prefill=lambda p, b: transformer.prefill(
+                p, b["tokens"], cfg, rules,
+                max_cache_len=cfg.max_cache_len, mesh=mesh),
+            decode_step=lambda p, tok, st, i: transformer.decode_step(
+                p, tok, st, i, cfg, rules, mesh),
+            batch_keys=("tokens", "targets", "loss_mask"),
+        )
+    if fam == "ssm":
+        return ModelApi(
+            cfg=cfg, rules=rules, mesh=mesh,
+            init=lambda key: mamba2.init_params(key, cfg),
+            axes=lambda: mamba2.param_axes(cfg),
+            loss=lambda p, b: mamba2.loss_fn(p, b, cfg, rules),
+            prefill=lambda p, b: mamba2.prefill(p, b["tokens"], cfg, rules),
+            decode_step=lambda p, tok, st, i: mamba2.decode_step(
+                p, tok, st, i, cfg, rules),
+            batch_keys=("tokens", "targets", "loss_mask"),
+        )
+    if fam == "hybrid":
+        return ModelApi(
+            cfg=cfg, rules=rules, mesh=mesh,
+            init=lambda key: hybrid.init_params(key, cfg),
+            axes=lambda: hybrid.param_axes(cfg),
+            loss=lambda p, b: hybrid.loss_fn(p, b, cfg, rules, mesh),
+            prefill=lambda p, b: hybrid.prefill(
+                p, b["tokens"], cfg, rules,
+                max_cache_len=cfg.max_cache_len, mesh=mesh),
+            decode_step=lambda p, tok, st, i: hybrid.decode_step(
+                p, tok, st, i, cfg, rules, mesh),
+            batch_keys=("tokens", "targets", "loss_mask"),
+        )
+    if fam == "encdec":
+        return ModelApi(
+            cfg=cfg, rules=rules, mesh=mesh,
+            init=lambda key: encdec.init_params(key, cfg),
+            axes=lambda: encdec.param_axes(cfg),
+            loss=lambda p, b: encdec.loss_fn(p, b, cfg, rules),
+            prefill=lambda p, b: encdec.prefill(
+                p, b["tokens"], cfg, rules, frames=b["frames"],
+                max_cache_len=cfg.max_cache_len),
+            decode_step=lambda p, tok, st, i: encdec.decode_step(
+                p, tok, st, i, cfg, rules),
+            batch_keys=("tokens", "targets", "loss_mask", "frames"),
+        )
+    if fam == "vlm":
+        return ModelApi(
+            cfg=cfg, rules=rules, mesh=mesh,
+            init=lambda key: vision.init_params(key, cfg),
+            axes=lambda: vision.param_axes(cfg),
+            loss=lambda p, b: vision.loss_fn(p, b, cfg, rules, mesh),
+            prefill=lambda p, b: vision.prefill(
+                p, b["tokens"], cfg, rules, patches=b["patches"],
+                max_cache_len=cfg.max_cache_len, mesh=mesh),
+            decode_step=lambda p, tok, st, i: vision.decode_step(
+                p, tok, st, i, cfg, rules, mesh),
+            batch_keys=("tokens", "targets", "loss_mask", "patches"),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def analytic_param_count(cfg: ModelConfig) -> int:
+    if cfg.family == "encdec":
+        return encdec.encdec_param_count(cfg)
+    if cfg.family == "vlm":
+        return vision.vlm_param_count(cfg)
+    return cfg.param_count()

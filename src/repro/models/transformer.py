@@ -1,0 +1,171 @@
+"""Dense decoder-only transformer LM (stablelm / qwen2 / llama3 / qwen3).
+
+Layers are a ``lax.scan`` over stacked parameters (HLO size O(1) in depth —
+mandatory for 80-layer x 512-device lowering) with configurable remat.
+The same forward serves training (full seq), prefill (seq -> cache) and
+decode (1 token + cache).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from . import layers as L
+from ..dist.sharding import ShardingRules, constrain
+
+
+def init_block(key, cfg: ModelConfig):
+    from . import moe as MoE
+    k1, k2 = jax.random.split(key)
+    ffn = (MoE.moe_init(k2, cfg) if cfg.num_experts > 0
+           else L.mlp_init(k2, cfg))
+    return dict(
+        ln1=L.norm_init(cfg), attn=L.attn_init(k1, cfg),
+        ln2=L.norm_init(cfg), mlp=ffn,
+    )
+
+
+def block_axes(cfg: ModelConfig):
+    from . import moe as MoE
+    ffn = MoE.moe_axes(cfg) if cfg.num_experts > 0 else L.mlp_axes()
+    return dict(ln1=L.norm_axes(cfg), attn=L.attn_axes(cfg),
+                ln2=L.norm_axes(cfg), mlp=ffn)
+
+
+def _stack_axes(axes_tree, n_layers_axis="layers"):
+    return jax.tree.map(
+        lambda axes: (n_layers_axis,) + axes,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, str) or a is None for a in x))
+
+
+def init_params(key, cfg: ModelConfig):
+    kE, kH, kL = jax.random.split(key, 3)
+    lkeys = jax.random.split(kL, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(lkeys)
+    p = dict(
+        embed=L.embed_init(kE, cfg),
+        blocks=blocks,
+        ln_f=L.norm_init(cfg),
+    )
+    if not cfg.tie_embeddings:
+        p["unembed"] = L.embed_init(kH, cfg)
+    return p
+
+
+def param_axes(cfg: ModelConfig):
+    a = dict(
+        embed=L.embed_axes(),
+        blocks=_stack_axes(block_axes(cfg)),
+        ln_f=L.norm_axes(cfg),
+    )
+    if not cfg.tie_embeddings:
+        a["unembed"] = L.embed_axes()
+    return a
+
+
+def _apply_ffn(x, mp, cfg: ModelConfig, rules: ShardingRules, mesh):
+    if cfg.num_experts > 0:
+        from . import moe as MoE
+        if mesh is not None and rules.expert is not None:
+            y, _ = MoE.moe_ffn_ep(x, mp, cfg, rules, mesh)
+        else:
+            y, _ = MoE.moe_ffn_dense(x, mp, cfg, rules)
+        return y
+    return L.apply_mlp(x, mp, cfg, rules)
+
+
+def _apply_block(x, bp, cfg: ModelConfig, rules: ShardingRules, *,
+                 positions, cache=None, cache_index=None, mesh=None):
+    h, new_cache = L.apply_attention(
+        L.apply_norm(x, bp["ln1"], cfg), bp["attn"], cfg, rules,
+        positions=positions, causal=True, cache=cache,
+        cache_index=cache_index)
+    if cfg.parallel_residual:
+        m = _apply_ffn(L.apply_norm(x, bp["ln1"], cfg), bp["mlp"], cfg,
+                       rules, mesh)
+        x = x + h + m
+    else:
+        x = x + h
+        x = x + _apply_ffn(L.apply_norm(x, bp["ln2"], cfg), bp["mlp"], cfg,
+                           rules, mesh)
+    x = constrain(x, rules, "batch", "seq", "act_embed")
+    return x, new_cache
+
+
+def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
+            positions=None, cache=None, cache_index=None, mesh=None):
+    """Returns (hidden (B,S,D), new_cache or None). ``cache`` is the stacked
+    (layers-leading) dict from layers.init_kv_cache."""
+    x = L.apply_embed(tokens, params["embed"], cfg, rules)
+    if positions is None:
+        s = tokens.shape[1]
+        base = 0 if cache_index is None else cache_index
+        positions = base + jnp.arange(s, dtype=jnp.int32)
+
+    if cache is None:
+        def body(carry, bp):
+            y, _ = _apply_block(carry, bp, cfg, rules, positions=positions,
+                                mesh=mesh)
+            return y, None
+        body = L.maybe_remat(body, cfg)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(body, x, params["blocks"])
+        else:
+            for i in range(cfg.num_layers):
+                bp = jax.tree.map(lambda t: t[i], params["blocks"])
+                x, _ = body(x, bp)
+        new_cache = None
+    else:
+        def body(carry, inp):
+            bp, ck, cv = inp
+            y, nc = _apply_block(carry, bp, cfg, rules, positions=positions,
+                                 cache=dict(k=ck, v=cv),
+                                 cache_index=cache_index, mesh=mesh)
+            return y, (nc["k"], nc["v"])
+        x, (nk, nv) = L.scan_or_unroll(body, x, (params["blocks"],
+                                                 cache["k"], cache["v"]),
+                                       cfg.scan_layers)
+        new_cache = dict(k=nk, v=nv)
+
+    x = L.apply_norm(x, params["ln_f"], cfg)
+    return x, new_cache
+
+
+def logits_of(params, hidden, cfg: ModelConfig, rules: ShardingRules):
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return L.apply_unembed(hidden, table, cfg, rules)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules, mesh=None):
+    hidden, _ = forward(params, batch["tokens"], cfg, rules, mesh=mesh)
+    logits = logits_of(params, hidden, cfg, rules)
+    return L.softmax_xent(logits, batch["targets"], batch["loss_mask"])
+
+
+def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
+            max_cache_len: int, mesh=None):
+    """Process a prompt, filling the KV cache. Returns (last_logits, cache,
+    next_index)."""
+    b, s = tokens.shape
+    cache = L.init_kv_cache(cfg, b, max_cache_len)
+    hidden, cache = forward(params, tokens, cfg, rules, cache=cache,
+                            cache_index=0, mesh=mesh)
+    logits = logits_of(params, hidden[:, -1:], cfg, rules)
+    return logits[:, 0], cache, s
+
+
+def decode_step(params, token, cache, index, cfg: ModelConfig,
+                rules: ShardingRules, mesh=None):
+    """One decode step. token: (B,) int32; index: scalar current length.
+    Returns (logits (B, V), new_cache)."""
+    hidden, cache = forward(params, token[:, None], cfg, rules,
+                            cache=cache, cache_index=index, mesh=mesh)
+    logits = logits_of(params, hidden, cfg, rules)
+    return logits[:, 0], cache

@@ -1,0 +1,3 @@
+"""Serving substrate: batched prefill + decode loop."""
+from .serve_loop import Server, ServeConfig
+__all__ = ["Server", "ServeConfig"]

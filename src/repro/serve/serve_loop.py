@@ -1,0 +1,64 @@
+"""Serving loop: batched prefill + incremental decode.
+
+Requests are padded/batched to the compiled (batch, prompt_len) buckets —
+one jitted prefill and one jitted decode_step per bucket, the standard
+static-shape TPU serving recipe. Sampling: greedy or temperature.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.registry import ModelApi
+from ..data.pipeline import PAD_ID, BOS_ID, EOS_ID
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0     # 0 = greedy
+    seed: int = 0
+
+
+class Server:
+    def __init__(self, api: ModelApi, params, scfg: ServeConfig):
+        self.api = api
+        self.params = params
+        self.scfg = scfg
+        self._prefill = jax.jit(lambda p, b: api.prefill(p, b))
+        self._decode = jax.jit(
+            lambda p, tok, st, i: api.decode_step(p, tok, st, i))
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, extra: dict | None = None):
+        """prompts: (B, L) int32, PAD-padded on the right (all rows share
+        the compiled prompt length). Returns (B, max_new_tokens) tokens.
+
+        NOTE: right-padded prompts shorter than L will attend to their own
+        padding; serving-quality masking uses per-row lengths — we decode
+        from the common prompt length (the bucket contract).
+        """
+        b, l = prompts.shape
+        batch = dict(tokens=jnp.asarray(prompts, jnp.int32))
+        if extra:
+            batch.update({k: jnp.asarray(v) for k, v in extra.items()})
+        logits, state, index = self._prefill(self.params, batch)
+        key = jax.random.PRNGKey(self.scfg.seed)
+        out = []
+        tok = self._sample(logits, key)
+        done = jnp.zeros((b,), bool)
+        for t in range(self.scfg.max_new_tokens):
+            out.append(np.asarray(tok))
+            done = done | (tok == EOS_ID)
+            key, sub = jax.random.split(key)
+            logits, state = self._decode(self.params, tok, state, index + t)
+            tok = jnp.where(done, EOS_ID, self._sample(logits, sub))
+        return np.stack(out, axis=1)

@@ -1,0 +1,11 @@
+"""Training substrate: optimizer, checkpointing, train loop, elasticity."""
+from .optimizer import OptConfig, init_opt_state, apply_updates, schedule, \
+    global_norm, compress_grads
+from .checkpoint import CheckpointManager
+from .train_loop import Trainer, TrainerConfig, make_train_step
+from .elastic import reshard_state, restore_on_mesh, state_shardings, state_axes
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "schedule",
+           "global_norm", "compress_grads", "CheckpointManager",
+           "Trainer", "TrainerConfig", "make_train_step",
+           "reshard_state", "restore_on_mesh", "state_shardings", "state_axes"]

@@ -1,0 +1,170 @@
+"""Sharded, async, topology-independent checkpointing.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123.tmp/...       while writing
+    <dir>/step_000123/
+        manifest.json               tree structure, shapes, dtypes, sha256
+        leaf_00000.npy ...          one file per pytree leaf
+    <dir>/LATEST                    atomically-replaced pointer file
+
+Protocol properties:
+* **atomic commit** — data is written to ``.tmp`` and renamed only after
+  fsync; a crash mid-save can never produce a half checkpoint that restore
+  would pick up (the same stage->rename discipline as the paper's log
+  mover, §2);
+* **integrity** — every leaf carries a sha256 in the manifest, verified on
+  restore;
+* **async** — ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes in a background thread, overlapping I/O with the next steps;
+* **topology-independent** — leaves are stored unsharded; ``restore`` takes
+  the *current* mesh/rules and device_puts each leaf with its sharding, so
+  a job checkpointed on one mesh restarts on another (elastic scaling).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def _tree_paths(tree):
+    paths = []
+    for kp, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        paths.append(jax.tree_util.keystr(kp))
+    return paths
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # ------------------------------------------------------------------ save
+    def _write(self, step: int, host_leaves, treedef, paths):
+        try:
+            name = f"step_{step:08d}"
+            final = os.path.join(self.dir, name)
+            if os.path.isdir(final):       # idempotent re-save of same step
+                return
+            tmp = os.path.join(self.dir, name + ".tmp")
+            os.makedirs(tmp, exist_ok=True)
+            manifest = dict(step=step, treedef=str(treedef), leaves=[])
+            for i, (leaf, path) in enumerate(zip(host_leaves, paths)):
+                fname = f"leaf_{i:05d}.npy"
+                buf = io.BytesIO()
+                np.save(buf, leaf, allow_pickle=False)
+                data = buf.getvalue()
+                with open(os.path.join(tmp, fname), "wb") as f:
+                    f.write(data)
+                    f.flush()
+                    os.fsync(f.fileno())
+                manifest["leaves"].append(dict(
+                    file=fname, path=path, shape=list(leaf.shape),
+                    dtype=str(leaf.dtype),
+                    sha256=hashlib.sha256(data).hexdigest()))
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, final)
+            # atomic LATEST pointer
+            ptr = os.path.join(self.dir, "LATEST.tmp")
+            with open(ptr, "w") as f:
+                f.write(name)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(ptr, os.path.join(self.dir, "LATEST"))
+            self._gc()
+        except Exception as e:  # surfaced on next wait()/save
+            self._error = e
+
+    def save_async(self, step: int, tree) -> None:
+        """Snapshot to host memory now; write in the background."""
+        self.wait()
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(l) for l in leaves]   # device->host sync point
+        paths = _tree_paths(tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, treedef, paths), daemon=True)
+        self._thread.start()
+
+    def save(self, step: int, tree) -> None:
+        self.save_async(step, tree)
+        self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[: -self.keep]:
+            full = os.path.join(self.dir, d)
+            for f in os.listdir(full):
+                os.unlink(os.path.join(full, f))
+            os.rmdir(full)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> int | None:
+        ptr = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(ptr):
+            return None
+        with open(ptr) as f:
+            name = f.read().strip()
+        if not os.path.isdir(os.path.join(self.dir, name)):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, template, step: int | None = None, shardings=None):
+        """Restore into the structure of ``template``. ``shardings`` is an
+        optional matching pytree of jax.sharding.Sharding — pass it to
+        resume on a different mesh (elastic restart)."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        t_leaves, treedef = _flatten(template)
+        if len(manifest["leaves"]) != len(t_leaves):
+            raise ValueError(
+                f"checkpoint has {len(manifest['leaves'])} leaves, template "
+                f"has {len(t_leaves)} — structure mismatch")
+        s_leaves = (jax.tree.flatten(shardings)[0]
+                    if shardings is not None else [None] * len(t_leaves))
+        out = []
+        for entry, tmpl, shard in zip(manifest["leaves"], t_leaves, s_leaves):
+            with open(os.path.join(d, entry["file"]), "rb") as f:
+                data = f.read()
+            digest = hashlib.sha256(data).hexdigest()
+            if digest != entry["sha256"]:
+                raise IOError(f"checksum mismatch for {entry['path']}")
+            arr = np.load(io.BytesIO(data), allow_pickle=False)
+            if list(arr.shape) != list(np.shape(tmpl)):
+                raise ValueError(
+                    f"shape mismatch for {entry['path']}: "
+                    f"{arr.shape} vs {np.shape(tmpl)}")
+            out.append(jax.device_put(arr, shard) if shard is not None
+                       else arr)
+        return jax.tree.unflatten(treedef, out)

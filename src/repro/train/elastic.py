@@ -1,0 +1,53 @@
+"""Elastic scaling: restart a checkpointed job on a *different* mesh.
+
+Checkpoints store unsharded leaves (checkpoint.py), so elasticity reduces
+to recomputing the sharding tree for the new mesh and device_put-ing each
+leaf. ``reshard_state`` also handles live (in-memory) state for planned
+resizes — e.g. shrinking from (16, 16) to (8, 16) after losing a slice, the
+scenario tests/test_elastic.py exercises on host devices.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..dist.sharding import ShardingRules, adapt_rules_for_mesh, tree_spec
+from ..models.registry import ModelApi
+from .checkpoint import CheckpointManager
+
+
+def state_axes(api: ModelApi):
+    """Logical axes for the full train state (opt moments mirror params)."""
+    p_axes = api.axes()
+    scalar = ()
+    axes = dict(params=p_axes,
+                opt=dict(mu=p_axes, nu=p_axes, step=scalar, skipped=scalar))
+    return axes
+
+
+def state_shardings(api: ModelApi, mesh: Mesh, rules: ShardingRules,
+                    with_err: bool = False):
+    axes = state_axes(api)
+    if with_err:
+        axes["opt"]["err"] = axes["params"]
+    rules = adapt_rules_for_mesh(rules, mesh)
+    specs = tree_spec(axes, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def reshard_state(state, api: ModelApi, new_mesh: Mesh,
+                  rules: ShardingRules):
+    """Live reshard onto a new mesh (planned elastic resize)."""
+    sh = state_shardings(api, new_mesh, rules,
+                         with_err="err" in state.get("opt", {}))
+    return jax.tree.map(jax.device_put, state, sh)
+
+
+def restore_on_mesh(ckpt_dir: str, template_state, api: ModelApi,
+                    mesh: Mesh, rules: ShardingRules, step: int | None = None):
+    """Restore the latest checkpoint directly onto ``mesh`` — the unplanned
+    restart path (node loss -> smaller pod)."""
+    mgr = CheckpointManager(ckpt_dir)
+    sh = state_shardings(api, mesh, rules,
+                         with_err="err" in template_state.get("opt", {}))
+    return mgr.restore(template_state, step=step, shardings=sh)

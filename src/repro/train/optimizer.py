@@ -1,0 +1,130 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, and optional
+error-feedback gradient compression (pure JAX — no optax).
+
+Compression simulates the cross-pod (DCI) all-reduce payload reduction:
+``ef_int8`` quantizes each gradient tensor to int8 with a per-tensor scale
+and carries the quantization error into the next step (error feedback keeps
+the method unbiased in the long run); ``sign`` is 1-bit signSGD-style with
+per-tensor L1 scaling. On real hardware the quantize/dequant pair brackets
+the pod-axis all-reduce; the numerics here are exactly what ships.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    compression: str = "none"    # none | ef_int8 | sign
+
+
+def schedule(step, cfg: OptConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init_opt_state(params, cfg: OptConfig):
+    zeros = lambda p: jax.tree.map(lambda t: jnp.zeros_like(t, jnp.float32), p)
+    state = dict(mu=zeros(params), nu=zeros(params),
+                 step=jnp.zeros((), jnp.int32),
+                 skipped=jnp.zeros((), jnp.int32))
+    if cfg.compression in ("ef_int8", "sign"):
+        state["err"] = zeros(params)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(t.astype(jnp.float32)))
+                        for t in jax.tree.leaves(tree)))
+
+
+def _quant_int8(t):
+    scale = jnp.max(jnp.abs(t)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, err, mode: str):
+    """Returns (compressed grads, new error feedback)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        if mode == "ef_int8":
+            c = _quant_int8(gf)
+        else:  # sign
+            scale = jnp.mean(jnp.abs(gf))
+            c = jnp.sign(gf) * scale
+        return c, gf - c
+    pairs = jax.tree.map(one, grads, err)
+    comp = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_err
+
+
+def apply_updates(params, grads, state, cfg: OptConfig):
+    """One AdamW step with clip + optional compression + non-finite guard.
+
+    A step whose global grad norm is non-finite is *skipped* (params and
+    moments unchanged, 'skipped' counter bumped) — the cheap first line of
+    fault tolerance against data poison / numeric blowups.
+    """
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    finite = jnp.isfinite(gnorm)
+
+    scale = jnp.where(gnorm > cfg.clip_norm, cfg.clip_norm / (gnorm + 1e-12),
+                      1.0)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    new_err = state.get("err")
+    if cfg.compression in ("ef_int8", "sign"):
+        grads, new_err = compress_grads(grads, state["err"], cfg.compression)
+
+    lr = schedule(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(p, g, mu, nu):
+        mu2 = b1 * mu + (1 - b1) * g
+        nu2 = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu2 / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu2 / (1 - b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), mu2, nu2
+
+    trip = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+    newp = jax.tree.map(lambda t: t[0], trip, is_leaf=is3)
+    newmu = jax.tree.map(lambda t: t[1], trip, is_leaf=is3)
+    newnu = jax.tree.map(lambda t: t[2], trip, is_leaf=is3)
+
+    # Non-finite guard: keep old values wholesale.
+    keep = lambda new, old: jax.tree.map(
+        lambda n, o: jnp.where(finite, n, o), new, old)
+    out_state = dict(mu=keep(newmu, state["mu"]), nu=keep(newnu, state["nu"]),
+                     step=step,
+                     skipped=state["skipped"] + (1 - finite.astype(jnp.int32)))
+    if new_err is not None:
+        out_state["err"] = keep(new_err, state["err"])
+    return keep(newp, params), out_state, dict(
+        grad_norm=gnorm, lr=lr, skipped=out_state["skipped"])

@@ -1,0 +1,142 @@
+"""Training loop: jitted step with microbatch gradient accumulation, NaN
+guards, checkpoint-restart, and failure-injection hooks.
+
+``make_train_step`` builds the jitted (state, batch) -> (state, metrics)
+function; microbatching splits the per-step batch into ``cfg.microbatches``
+slices and accumulates gradients with a ``lax.scan`` (remat'd model inside),
+which is also the activation-memory lever for the biggest configs.
+
+``Trainer`` drives the host loop: deterministic resume from (checkpoint
+step -> epoch/step arithmetic on the deterministic pipeline), periodic
+async checkpoints, straggler mitigation via the pipeline's prefetch thread,
+and a watchdog that aborts if too many consecutive steps were skipped
+non-finite.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.registry import ModelApi
+from .optimizer import OptConfig, init_opt_state, apply_updates
+from .checkpoint import CheckpointManager
+
+
+def make_train_step(api: ModelApi, opt_cfg: OptConfig):
+    cfg = api.cfg
+    n_micro = max(cfg.microbatches, 1)
+
+    def loss_and_grad(params, batch):
+        return jax.value_and_grad(lambda p: api.loss(p, batch), has_aux=True)(
+            params)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if n_micro == 1:
+            (loss, aux), grads = loss_and_grad(params, batch)
+        else:
+            def split(t):
+                b = t.shape[0]
+                assert b % n_micro == 0, (t.shape, n_micro)
+                return t.reshape((n_micro, b // n_micro) + t.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, aux), g = loss_and_grad(params, mb)
+                g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                     g_acc, g)
+                return (g_acc, loss_acc + loss), aux
+
+            g0 = jax.tree.map(lambda t: jnp.zeros(t.shape, jnp.float32),
+                              params)
+            carry0 = (g0, jnp.zeros((), jnp.float32))
+            if cfg.unroll_microbatches:
+                carry = carry0
+                for i in range(n_micro):
+                    mb = jax.tree.map(lambda t: t[i], micro)
+                    carry, aux = acc_body(carry, mb)
+                grads, loss_sum = carry
+            else:
+                (grads, loss_sum), auxs = jax.lax.scan(acc_body, carry0, micro)
+                aux = jax.tree.map(lambda t: t[-1], auxs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss_sum / n_micro
+
+        new_params, new_opt, opt_stats = apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        metrics = dict(loss=loss, **opt_stats)
+        return dict(params=new_params, opt=new_opt), metrics
+
+    return step_fn
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    log_every: int = 10
+    max_consecutive_skips: int = 10
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+
+
+@dataclass
+class Trainer:
+    api: ModelApi
+    opt_cfg: OptConfig
+    tcfg: TrainerConfig
+    log_fn: Callable[[int, dict], None] = lambda step, m: None
+
+    def init_state(self, seed: int = 0):
+        params = self.api.init(jax.random.PRNGKey(seed))
+        return dict(params=params, opt=init_opt_state(params, self.opt_cfg))
+
+    def run(self, pipeline, state=None, resume: bool = True) -> dict:
+        """Train over the deterministic pipeline; restart-safe."""
+        ckpt = CheckpointManager(self.tcfg.checkpoint_dir,
+                                 keep=self.tcfg.keep_checkpoints)
+        start_step = 0
+        if state is None:
+            state = self.init_state()
+            if resume and ckpt.latest_step() is not None:
+                start_step = ckpt.latest_step()
+                state = ckpt.restore(state, step=start_step)
+                state = jax.tree.map(jnp.asarray, state)
+
+        step_fn = jax.jit(make_train_step(self.api, self.opt_cfg))
+        per_epoch = max(pipeline.batches_per_epoch(), 1)
+        history = []
+        last_skip = 0
+        consecutive_skips = 0
+        t0 = time.time()
+        for step in range(start_step, self.tcfg.total_steps):
+            epoch, estep = divmod(step, per_epoch)
+            batch = pipeline.batch_at(epoch, estep)
+            state, metrics = step_fn(state, batch)
+
+            skipped = int(metrics["skipped"])
+            consecutive_skips = (consecutive_skips + 1
+                                 if skipped > last_skip else 0)
+            last_skip = skipped
+            if consecutive_skips >= self.tcfg.max_consecutive_skips:
+                raise RuntimeError(
+                    f"{consecutive_skips} consecutive non-finite steps — "
+                    f"aborting for operator attention (last checkpoint is "
+                    f"intact)")
+
+            if (step + 1) % self.tcfg.log_every == 0 or step == start_step:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["steps_per_s"] = (step + 1 - start_step) / max(
+                    time.time() - t0, 1e-9)
+                history.append((step + 1, m))
+                self.log_fn(step + 1, m)
+            if (step + 1) % self.tcfg.checkpoint_every == 0:
+                ckpt.save_async(step + 1, state)
+        ckpt.save(self.tcfg.total_steps, state)
+        return dict(state=state, history=history)

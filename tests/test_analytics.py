@@ -1,0 +1,123 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EventDictionary, NameTable, SessionSequences,
+                        sessionize)
+from repro.core.oracle import (count_events_oracle, funnel_oracle,
+                               ngram_counts_oracle)
+from repro.analytics import (count_events, count_pattern, rollup_counts,
+                             funnel_reach, abandonment, NGramLM,
+                             ngram_counts, unpack_key, collocations,
+                             top_collocations, summarize)
+from repro.core.sessionize import PAD_CODE
+
+
+def _seqs_from_rows(rows, alphabet):
+    s, max_len = len(rows), max(len(r) for r in rows)
+    symbols = np.full((s, max_len), PAD_CODE, np.int32)
+    for i, r in enumerate(rows):
+        symbols[i, :len(r)] = r
+    return SessionSequences(
+        symbols=symbols, length=np.array([len(r) for r in rows], np.int32),
+        user_id=np.arange(s, dtype=np.int64) % 3,
+        session_id=np.arange(s, dtype=np.int64),
+        ip=np.zeros(s, np.int64), start_ts=np.zeros(s, np.int64),
+        duration_s=np.full(s, 100, np.int32))
+
+
+ROWS = st.lists(st.lists(st.integers(0, 19), min_size=1, max_size=30),
+                min_size=1, max_size=20)
+
+
+@given(ROWS, st.sets(st.integers(0, 19), min_size=1, max_size=5))
+@settings(max_examples=40, deadline=None)
+def test_count_events_matches_oracle(rows, targets):
+    seqs = _seqs_from_rows(rows, 20)
+    tot, cont = count_events(seqs, sorted(targets), 20)
+    sessions = [dict(symbols=r) for r in rows]
+    otot, ocont = count_events_oracle(sessions, sorted(targets))
+    assert (tot, cont) == (otot, ocont)
+
+
+@given(ROWS, st.lists(st.sets(st.integers(0, 19), min_size=1, max_size=3),
+                      min_size=1, max_size=4))
+@settings(max_examples=40, deadline=None)
+def test_funnel_matches_oracle(rows, stages):
+    seqs = _seqs_from_rows(rows, 20)
+    stages = [sorted(s) for s in stages]
+    reach = funnel_reach(seqs, stages, 20)
+    want = funnel_oracle([dict(symbols=r) for r in rows], stages)
+    assert [c for _, c in reach] == want
+    # monotone non-increasing reach
+    counts = [c for _, c in reach]
+    assert all(a >= b for a, b in zip(counts, counts[1:]))
+
+
+def test_abandonment():
+    assert abandonment([(0, 100), (1, 60), (2, 30)]) == [0.4, 0.5]
+
+
+@given(ROWS, st.integers(1, 3))
+@settings(max_examples=30, deadline=None)
+def test_ngram_counts_match_oracle(rows, n):
+    seqs = _seqs_from_rows(rows, 20)
+    keys, counts = ngram_counts(seqs, n, 20)
+    want = ngram_counts_oracle([dict(symbols=r) for r in rows], n)
+    got = {unpack_key(int(k), n, 20): int(c) for k, c in zip(keys, counts)}
+    assert got == want
+
+
+def test_perplexity_uniform_data():
+    rng = np.random.default_rng(0)
+    rows = [rng.integers(0, 16, 50).tolist() for _ in range(40)]
+    seqs = _seqs_from_rows(rows, 16)
+    lm = NGramLM.fit(seqs, 1, 16)
+    # iid uniform over 16 symbols -> ~4 bits/symbol
+    assert abs(lm.cross_entropy(seqs) - 4.0) < 0.2
+
+
+def test_bigram_model_beats_unigram_on_markov_data():
+    rng = np.random.default_rng(1)
+    rows = []
+    for _ in range(60):
+        seq = [int(rng.integers(0, 8))]
+        for _ in range(40):  # strongly deterministic chain
+            seq.append((seq[-1] + (1 if rng.random() < 0.9 else 3)) % 8)
+        rows.append(seq)
+    seqs = _seqs_from_rows(rows, 8)
+    h1 = NGramLM.fit(seqs, 1, 8).cross_entropy(seqs)
+    h2 = NGramLM.fit(seqs, 2, 8).cross_entropy(seqs)
+    assert h2 < h1 - 1.0  # big temporal signal
+
+
+def test_planted_collocation_found():
+    rng = np.random.default_rng(2)
+    rows = []
+    for _ in range(50):
+        seq = rng.integers(0, 20, 30).tolist()
+        for j in range(0, 28, 7):   # plant "5 followed by 17"
+            seq[j], seq[j + 1] = 5, 17
+        rows.append(seq)
+    seqs = _seqs_from_rows(rows, 20)
+    top = collocations(seqs, 20, min_count=5)[0]
+    assert (top.first, top.second) == (5, 17)
+    assert top.pmi > 0
+
+
+def test_rollup_totals_consistent():
+    table = NameTable([f"web:p{i}:s:c:e:act_{i % 3}" for i in range(9)])
+    ids = np.arange(9, dtype=np.int32).repeat(3)
+    d = EventDictionary.build(table, ids)
+    tables = rollup_counts(ids, d)
+    for t in tables:
+        assert sum(t.values()) == len(ids)   # every level partitions events
+    assert len(tables[0]) >= len(tables[-1])  # coarser => fewer groups
+
+
+def test_summary_buckets():
+    rows = [[1, 2], [3]]
+    seqs = _seqs_from_rows(rows, 4)
+    rep = summarize(seqs)
+    assert sum(rep.duration_histogram.values()) == len(rows)
+    assert rep.totals["sessions"] == 2

@@ -1,0 +1,62 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EventDictionary, NameTable, assign_codes, histogram
+from repro.core.oracle import histogram_oracle
+
+NAMES = [f"web:home:s{i}:c:e:action_{i}" for i in range(24)]
+
+
+def _dict_for(ids):
+    table = NameTable(NAMES)
+    return EventDictionary.build(table, np.asarray(ids, np.int32))
+
+
+@given(st.lists(st.integers(0, 23), min_size=1, max_size=400))
+@settings(max_examples=50, deadline=None)
+def test_histogram_matches_oracle(ids):
+    d = _dict_for(ids)
+    assert np.array_equal(d.counts, histogram_oracle(ids, 24))
+
+
+@given(st.lists(st.integers(0, 23), min_size=1, max_size=400))
+@settings(max_examples=50, deadline=None)
+def test_bijection_and_frequency_order(ids):
+    d = _dict_for(ids)
+    d.verify()  # asserts bijection + monotone counts
+    # paper: more frequent events get smaller code points
+    ordered = d.counts[d.name_of_code]
+    assert all(ordered[i] >= ordered[i + 1] for i in range(len(ordered) - 1))
+
+
+@given(st.lists(st.integers(0, 23), min_size=1, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_encode_decode_roundtrip(ids):
+    d = _dict_for(ids)
+    codes = np.asarray(d.encode_ids(np.asarray(ids, np.int32)))
+    back = np.asarray(d.decode_codes(codes))
+    assert np.array_equal(back, np.asarray(ids))
+
+
+def test_validity_mask_excludes_rows():
+    ids = np.array([0, 1, 1, 2], np.int32)
+    valid = np.array([True, False, True, True])
+    h = np.asarray(histogram(ids, 24, valid=valid))
+    assert h[0] == 1 and h[1] == 1 and h[2] == 1
+
+
+def test_pattern_expansion_codes():
+    ids = [0] * 5 + [1] * 3 + [2]
+    d = _dict_for(ids)
+    codes = d.codes_matching("*:action_1")
+    assert len(codes) == 1
+    assert d.name_of(int(codes[0])).endswith("action_1")
+
+
+def test_save_load_stable(tmp_path):
+    d = _dict_for([0, 0, 1, 2, 2, 2])
+    p = str(tmp_path / "dict.json")
+    d.save(p)
+    d2 = EventDictionary.load(p)
+    assert np.array_equal(d.code_of_name, d2.code_of_name)
+    assert d2.code_of("web:home:s2:c:e:action_2") == 0  # most frequent

@@ -1,0 +1,177 @@
+"""Multi-device behaviour on host devices — run in subprocesses so the
+8-device XLA flag never leaks into the rest of the suite."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(body: str) -> str:
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, {REPO_SRC!r})
+        import numpy as np, jax, jax.numpy as jnp
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_distributed_sessionize_matches_oracle():
+    _run("""
+    from repro.core.distributed import make_distributed_sessionize
+    from repro.core import oracle
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(1)
+    N = 4096
+    user = rng.integers(0, 150, N).astype(np.int64) * 7919
+    sess = rng.integers(0, 2, N).astype(np.int64)
+    ts = (1.7e12 + rng.integers(0, 2*3600*1000, N)).astype(np.int64)
+    code = rng.integers(0, 64, N).astype(np.int32)
+    f = make_distributed_sessionize(mesh, "data",
+                                    max_sessions_per_shard=1024, max_len=256)
+    out, dropped = f(user, sess, ts, code)
+    assert dropped == 0
+    ora = oracle.sessionize_oracle(user, sess, ts, code)
+    total = int(np.asarray(out["num_sessions"]).sum())
+    assert total == len(ora), (total, len(ora))
+    got = []
+    ns = np.asarray(out["num_sessions"])
+    for sh in range(8):
+        for i in range(int(ns[sh])):
+            got.append((int(np.asarray(out["user_id"])[sh, i]),
+                        int(np.asarray(out["length"])[sh, i])))
+    assert sorted(got) == sorted((o["user_id"], o["length"]) for o in ora)
+    print("OK")
+    """)
+
+
+def test_distributed_histogram():
+    _run("""
+    from repro.core.distributed import make_distributed_histogram
+    from repro.core import oracle
+    mesh = jax.make_mesh((8,), ("data",))
+    rng = np.random.default_rng(2)
+    ids = rng.integers(0, 31, 4096).astype(np.int32)
+    f = make_distributed_histogram(mesh, "data", num_names=31)
+    h = f(ids)
+    assert np.array_equal(h, oracle.histogram_oracle(ids, 31))
+    print("OK")
+    """)
+
+
+def test_moe_ep_on_real_mesh():
+    _run("""
+    from jax.sharding import AxisType
+    from repro.models.config import ModelConfig
+    from repro.models import moe as M
+    from repro.dist.sharding import ShardingRules, REPLICATED
+    cfg = ModelConfig(num_layers=1, d_model=32, d_ff=64, vocab_size=50,
+                      num_experts=8, experts_per_token=2, dtype="float32",
+                      moe_capacity_factor=8.0)
+    p = M.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32), jnp.float32)
+    y_dense, _ = M.moe_ffn_dense(x, p, cfg, REPLICATED)
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,)*2)
+    rules = ShardingRules(batch=("data",), expert="model", embed="data")
+    with jax.set_mesh(mesh):
+        y_ep, drops = jax.jit(
+            lambda xx, pp: M.moe_ffn_ep(xx, pp, cfg, rules, mesh))(x, p)
+    assert int(drops) == 0
+    np.testing.assert_allclose(y_dense, np.asarray(y_ep), rtol=1e-5,
+                               atol=1e-5)
+    print("OK")
+    """)
+
+
+def test_sharded_train_step_and_elastic_reshard():
+    _run("""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models import ModelConfig, get_model
+    from repro.dist.sharding import ShardingRules, adapt_rules_for_mesh
+    from repro.train import (OptConfig, init_opt_state, make_train_step)
+    from repro.train.elastic import state_shardings, reshard_state
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = ModelConfig(name="d", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=128,
+                      dtype="float32", remat="none")
+    rules = ShardingRules(batch=("data",))
+    mesh1 = make_host_mesh(data=2, model=4)
+    api = get_model(cfg, mesh1, adapt_rules_for_mesh(rules, mesh1))
+    params = api.init(jax.random.PRNGKey(0))
+    ocfg = OptConfig(lr=1e-2)
+    state = dict(params=params, opt=init_opt_state(params, ocfg))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(4, 128, (8, 17)).astype(np.int32)
+    batch = dict(tokens=toks[:, :-1], targets=toks[:, 1:],
+                 loss_mask=np.ones((8, 16), np.float32))
+
+    sh1 = state_shardings(api, mesh1, rules)
+    state1 = jax.tree.map(jax.device_put, state, sh1)
+    with mesh1:
+        step1 = jax.jit(make_train_step(api, ocfg))
+        s_after1, m1 = step1(state1, batch)
+
+    # single-device reference
+    api0 = get_model(cfg)
+    s_ref, m_ref = make_train_step(api0, ocfg)(state, batch)
+    for a, b in zip(jax.tree.leaves(s_after1["params"]),
+                    jax.tree.leaves(s_ref["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+    # elastic: reshard the live state onto a different mesh and keep going
+    mesh2 = make_host_mesh(data=4, model=2)
+    api2 = get_model(cfg, mesh2, adapt_rules_for_mesh(rules, mesh2))
+    state2 = reshard_state(s_after1, api2, mesh2, rules)
+    with mesh2:
+        step2 = jax.jit(make_train_step(api2, ocfg))
+        s_after2, m2 = step2(state2, batch)
+    s_ref2, _ = make_train_step(api0, ocfg)(s_ref, batch)
+    for a, b in zip(jax.tree.leaves(s_after2["params"]),
+                    jax.tree.leaves(s_ref2["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+    print("OK")
+    """)
+
+
+def test_restore_checkpoint_on_new_mesh(tmp_path):
+    _run(f"""
+    from repro.models import ModelConfig, get_model
+    from repro.dist.sharding import ShardingRules, adapt_rules_for_mesh
+    from repro.train import OptConfig, init_opt_state, CheckpointManager
+    from repro.train.elastic import restore_on_mesh
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = ModelConfig(name="d", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=4, d_ff=128, vocab_size=128,
+                      dtype="float32", remat="none")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(7))
+    state = dict(params=params, opt=init_opt_state(params, OptConfig()))
+    mgr = CheckpointManager({str(tmp_path)!r})
+    mgr.save(5, state)
+
+    mesh = make_host_mesh(data=4, model=2)
+    rules = ShardingRules(batch=("data",))
+    restored = restore_on_mesh({str(tmp_path)!r}, state,
+                               get_model(cfg, mesh), mesh, rules)
+    for a, b in zip(jax.tree.leaves(restored["params"]),
+                    jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # restored leaves actually live sharded on the new mesh
+    leaf = jax.tree.leaves(restored["params"])[1]
+    assert len(leaf.sharding.device_set) > 1
+    print("OK")
+    """)

@@ -1,0 +1,75 @@
+"""Dry-run machinery sanity: lower+compile a reduced cell on a small host
+mesh in a subprocess (the production 512-device sweep runs via
+``python -m repro.launch.dryrun --all``; these keep the plumbing honest in
+the fast suite)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(body: str) -> str:
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+        import sys; sys.path.insert(0, {REPO_SRC!r})
+        import numpy as np, jax, jax.numpy as jnp
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+CELL_BODY = """
+from jax.sharding import AxisType
+from repro.launch.shapes import make_cell, Shape
+mesh = jax.make_mesh((4, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+cell = make_cell({arch!r}, {shape!r}, mesh,
+                 overrides=dict({overrides}),
+                 shape_override=Shape({kind!r}, {seq}, {batch}))
+fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+             donate_argnums=cell.donate_argnums)
+with mesh:
+    compiled = fn.lower(*cell.args).compile()
+mem = compiled.memory_analysis()
+assert mem.temp_size_in_bytes > 0
+cost = compiled.cost_analysis()
+assert cost["flops"] > 0
+print("OK", int(mem.temp_size_in_bytes), int(cost["flops"]))
+"""
+
+
+@pytest.mark.parametrize("arch,shape,kind,seq,batch,overrides", [
+    ("llama3-8b", "train_4k", "train", 256, 16,
+     "num_layers=2, d_model=256, d_ff=512, num_heads=8, num_kv_heads=4, "
+     "vocab_size=1024, microbatches=2"),
+    ("llama3-8b", "decode_32k", "decode", 512, 16,
+     "num_layers=2, d_model=256, d_ff=512, num_heads=8, num_kv_heads=4, "
+     "vocab_size=1024"),
+    ("dbrx-132b", "train_4k", "train", 256, 16,
+     "num_layers=2, d_model=256, d_ff=256, num_heads=8, num_kv_heads=4, "
+     "vocab_size=1024, num_experts=8, experts_per_token=2, microbatches=1"),
+    ("mamba2-370m", "prefill_32k", "prefill", 256, 16,
+     "num_layers=2, d_model=256, ssm_state=32, ssm_headdim=32, ssm_chunk=64,"
+     " vocab_size=1024"),
+])
+def test_cell_lowers_and_compiles(arch, shape, kind, seq, batch, overrides):
+    out = _run(CELL_BODY.format(arch=arch, shape=shape, kind=kind, seq=seq,
+                                batch=batch, overrides=overrides))
+    assert out.startswith("OK")
+
+
+def test_seq_parallel_variant_compiles():
+    out = _run(CELL_BODY.format(
+        arch="llama3-8b", shape="train_4k", kind="train", seq=256, batch=16,
+        overrides="num_layers=2, d_model=256, d_ff=512, num_heads=8, "
+                  "num_kv_heads=4, vocab_size=1024, microbatches=1, "
+                  "seq_parallel=True"))
+    assert out.startswith("OK")

@@ -1,0 +1,115 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret mode vs pure-jnp
+oracle (assert_allclose)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref, attention_blocked
+from repro.kernels.funnel_match.ops import deepest_stage, reach_counts
+from repro.kernels.funnel_match.ref import (pack_match_bits,
+                                            deepest_stage_oracle_np)
+from repro.kernels.event_count.ops import histogram
+from repro.kernels.event_count.ref import histogram_ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("b,h,kvh,lq,lk,d", [
+    (1, 4, 4, 128, 128, 32),     # MHA square
+    (2, 8, 2, 256, 256, 64),     # GQA 4:1
+    (1, 8, 1, 128, 256, 64),     # MQA
+    (2, 4, 2, 256, 512, 128),    # lk > lq, d=128
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_shapes(b, h, kvh, lq, lk, d, causal):
+    q = RNG.standard_normal((b, h, lq, d), np.float32)
+    k = RNG.standard_normal((b, kvh, lk, d), np.float32)
+    v = RNG.standard_normal((b, kvh, lk, d), np.float32)
+    ref = attention_ref(q, k, v, causal=causal)
+    pal = flash_attention(q, k, v, causal=causal, impl="interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [("float32", 2e-5), ("bfloat16", 2e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    q = RNG.standard_normal((1, 4, 128, 64)).astype(dtype)
+    k = RNG.standard_normal((1, 2, 128, 64)).astype(dtype)
+    v = RNG.standard_normal((1, 2, 128, 64)).astype(dtype)
+    ref = attention_ref(q, k, v)
+    pal = flash_attention(q, k, v, impl="interpret")
+    np.testing.assert_allclose(np.asarray(pal, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_kv_len_and_offset():
+    q = RNG.standard_normal((2, 4, 128, 32), np.float32)
+    k = RNG.standard_normal((2, 4, 256, 32), np.float32)
+    v = RNG.standard_normal((2, 4, 256, 32), np.float32)
+    ref = attention_ref(q, k, v, causal=True, kv_len=200, q_offset=64)
+    pal = flash_attention(q, k, v, causal=True, kv_len=200, q_offset=64,
+                          impl="interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_blocked_equals_ref_many_blocks():
+    q = RNG.standard_normal((1, 4, 96, 32), np.float32)
+    k = RNG.standard_normal((1, 4, 320, 32), np.float32)
+    v = RNG.standard_normal((1, 4, 320, 32), np.float32)
+    ref = attention_ref(q, k, v, causal=False, kv_len=300)
+    blk = attention_blocked(q, k, v, causal=False, kv_len=300, block_k=64)
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_gradients_match_ref():
+    q = RNG.standard_normal((1, 2, 64, 32), np.float32)
+    k = RNG.standard_normal((1, 2, 64, 32), np.float32)
+    v = RNG.standard_normal((1, 2, 64, 32), np.float32)
+    g_ref = jax.grad(lambda q_: attention_ref(q_, k, v).sum())(q)
+    g_pal = jax.grad(
+        lambda q_: flash_attention(q_, k, v, impl="interpret").sum())(q)
+    np.testing.assert_allclose(np.asarray(g_pal), np.asarray(g_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("s,l,k,a", [(17, 33, 1, 16), (64, 96, 4, 500),
+                                     (300, 96, 8, 100), (5, 256, 3, 40)])
+def test_funnel_kernel_sweep(s, l, k, a):
+    sym = RNG.integers(0, a, (s, l)).astype(np.int32)
+    mask = np.arange(l)[None, :] < RNG.integers(1, l + 1, (s, 1))
+    table = np.zeros((k, a), bool)
+    for kk in range(k):
+        table[kk, RNG.choice(a, max(2, a // 10), replace=False)] = True
+    bits = np.asarray(pack_match_bits(jnp.asarray(sym), jnp.asarray(mask),
+                                      jnp.asarray(table)))
+    want = deepest_stage_oracle_np(bits)
+    for impl in ("ref", "interpret"):
+        got = np.asarray(deepest_stage(sym, mask, table, impl=impl))
+        np.testing.assert_array_equal(got, want)
+
+
+def test_funnel_reach_counts_consistent():
+    sym = RNG.integers(0, 30, (50, 40)).astype(np.int32)
+    mask = np.ones_like(sym, bool)
+    table = np.zeros((3, 30), bool)
+    table[0, :10] = True
+    table[1, 10:20] = True
+    table[2, 20:] = True
+    r_ref = reach_counts(sym, mask, table, impl="ref")
+    r_pal = reach_counts(sym, mask, table, impl="interpret")
+    assert r_ref == r_pal
+
+
+@pytest.mark.parametrize("s,l,a", [(13, 7, 33), (64, 128, 700), (1, 5, 4096)])
+def test_histogram_kernel_sweep(s, l, a):
+    sym = RNG.integers(0, a, (s, l)).astype(np.int32)
+    mask = RNG.random((s, l)) < 0.8
+    ref = np.asarray(histogram_ref(jnp.asarray(sym), jnp.asarray(mask), a))
+    pal = np.asarray(histogram(sym, mask, a, impl="interpret"))
+    np.testing.assert_array_equal(ref, pal)
+    assert ref.sum() == mask.sum()

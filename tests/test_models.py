@@ -1,0 +1,216 @@
+"""Model-zoo behaviour: param accounting, decode/teacher-forcing agreement,
+MoE routing equivalence, SSD chunked-vs-sequential."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import ModelConfig, get_model, analytic_param_count
+from repro.models import transformer as T
+from repro.models import mamba2 as MB
+from repro.models import moe as MOE
+from repro.dist.sharding import REPLICATED, ShardingRules
+
+RNG = np.random.default_rng(0)
+
+
+def _batch(cfg, b=2, s=24, extra=None):
+    toks = RNG.integers(4, cfg.vocab_size, (b, s + 1)).astype(np.int32)
+    out = dict(tokens=toks[:, :-1], targets=toks[:, 1:],
+               loss_mask=np.ones((b, s), np.float32))
+    if extra:
+        out.update(extra(b))
+    return out
+
+
+DENSE = ModelConfig(name="d", family="dense", num_layers=3, d_model=64,
+                    num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=211,
+                    qk_norm=True, attn_bias=True, dtype="float32",
+                    remat="none", max_cache_len=48)
+
+
+def test_dense_param_count_exact():
+    api = get_model(DENSE)
+    params = api.init(jax.random.PRNGKey(0))
+    assert sum(t.size for t in jax.tree.leaves(params)) == \
+        analytic_param_count(DENSE)
+
+
+def test_dense_decode_matches_teacher_forcing():
+    api = get_model(DENSE)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch(DENSE)
+    hidden, _ = T.forward(params, batch["tokens"], DENSE, REPLICATED)
+    full = np.asarray(T.logits_of(params, hidden, DENSE, REPLICATED))
+    lg, st, idx = api.prefill(params, {**batch,
+                                       "tokens": batch["tokens"][:, :12]})
+    np.testing.assert_allclose(np.asarray(lg), full[:, 11], rtol=2e-4,
+                               atol=2e-4)
+    for t in range(12, 18):
+        lg, st = api.decode_step(params, batch["tokens"][:, t], st, t)
+        np.testing.assert_allclose(np.asarray(lg), full[:, t], rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_remat_and_unroll_invariance():
+    api = get_model(DENSE)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch(DENSE)
+    base = float(api.loss(params, batch)[0])
+    for variant in (DENSE.with_(remat="full"),
+                    DENSE.with_(scan_layers=False),
+                    DENSE.with_(remat="dots", scan_layers=False)):
+        alt = float(get_model(variant).loss(params, batch)[0])
+        assert abs(alt - base) < 1e-5
+
+
+def test_microbatch_invariance():
+    cfg = DENSE.with_(microbatches=1)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, b=4)
+    from repro.train import make_train_step, OptConfig, init_opt_state
+    ocfg = OptConfig(lr=1e-3)
+    s1 = dict(params=params, opt=init_opt_state(params, ocfg))
+    s2 = jax.tree.map(jnp.copy, s1)
+    st1, m1 = make_train_step(api, ocfg)(s1, batch)
+    api4 = get_model(cfg.with_(microbatches=4))
+    st4, m4 = make_train_step(api4, ocfg)(s2, batch)
+    # same data, same total gradient (up to accumulation-order float noise)
+    for a, b in zip(jax.tree.leaves(st1["params"]),
+                    jax.tree.leaves(st4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_moe_ep_equals_dense_routing():
+    cfg = ModelConfig(num_layers=1, d_model=32, d_ff=64, vocab_size=50,
+                      num_experts=8, experts_per_token=2, dtype="float32",
+                      moe_capacity_factor=8.0)
+    p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.float32)
+    y_dense, _ = MOE.moe_ffn_dense(x, p, cfg, REPLICATED)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules(batch=("data",), expert="model")
+    y_ep, drops = MOE.moe_ffn_ep(x, p, cfg, rules, mesh)
+    assert int(drops) == 0
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_ep),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_capacity_drops_counted():
+    cfg = ModelConfig(num_layers=1, d_model=32, d_ff=64, vocab_size=50,
+                      num_experts=8, experts_per_token=4, dtype="float32",
+                      moe_capacity_factor=0.05)   # absurdly tight
+    p = MOE.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32), jnp.float32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = ShardingRules(batch=("data",), expert="model")
+    _, drops = MOE.moe_ffn_ep(x, p, cfg, rules, mesh)
+    assert int(drops) > 0
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 16), (40, 8), (128, 128)])
+def test_ssd_chunked_vs_sequential(s, chunk):
+    B, H, P, N = 2, 4, 16, 8
+    x = jnp.asarray(RNG.standard_normal((B, s, H, P)), jnp.float32)
+    dt = jax.nn.softplus(jnp.asarray(RNG.standard_normal((B, s, H)), jnp.float32))
+    a = -jnp.exp(jnp.asarray(RNG.standard_normal(H), jnp.float32))
+    Bm = jnp.asarray(RNG.standard_normal((B, s, H, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((B, s, H, N)), jnp.float32)
+    y1, h1 = MB.ssd_sequential_ref(x, dt, a, Bm, Cm)
+    y2, h2 = MB.ssd_chunked(x, dt, a, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssm_decode_matches_teacher_forcing():
+    cfg = ModelConfig(name="s", family="ssm", num_layers=2, d_model=64,
+                      vocab_size=101, d_ff=0, ssm_state=16, ssm_headdim=16,
+                      ssm_chunk=16, dtype="float32", remat="none")
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, s=32)
+    hidden, _ = MB.forward(params, batch["tokens"], cfg, REPLICATED)
+    full = np.asarray(jnp.einsum("bsd,vd->bsv", hidden, params["unembed"]))
+    lg, st, idx = api.prefill(params, {**batch,
+                                       "tokens": batch["tokens"][:, :16]})
+    np.testing.assert_allclose(np.asarray(lg), full[:, 15], rtol=3e-4,
+                               atol=3e-4)
+    for t in range(16, 22):
+        lg, st = api.decode_step(params, batch["tokens"][:, t], st, t)
+        np.testing.assert_allclose(np.asarray(lg), full[:, t], rtol=3e-4,
+                                   atol=3e-4)
+
+
+def test_hybrid_decode_matches_teacher_forcing():
+    cfg = ModelConfig(name="h", family="hybrid", num_layers=5, attn_every=2,
+                      d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+                      vocab_size=101, ssm_state=16, ssm_headdim=16,
+                      ssm_chunk=16, dtype="float32", remat="none",
+                      max_cache_len=48)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, s=32)
+    from repro.models import hybrid as HY
+    hidden, _ = HY.forward(params, batch["tokens"], cfg, REPLICATED)
+    full = np.asarray(jnp.einsum("bsd,vd->bsv", hidden, params["unembed"]))
+    lg, st, idx = api.prefill(params, {**batch,
+                                       "tokens": batch["tokens"][:, :16]})
+    np.testing.assert_allclose(np.asarray(lg), full[:, 15], rtol=3e-4,
+                               atol=3e-4)
+    for t in range(16, 20):
+        lg, st = api.decode_step(params, batch["tokens"][:, t], st, t)
+        np.testing.assert_allclose(np.asarray(lg), full[:, t], rtol=3e-4,
+                                   atol=3e-4)
+
+
+def test_encdec_decode_matches_teacher_forcing():
+    cfg = ModelConfig(name="w", family="encdec", num_layers=2,
+                      encoder_layers=2, d_model=64, num_heads=4,
+                      num_kv_heads=4, d_ff=128, vocab_size=101, n_frames=12,
+                      max_target_len=64, use_layernorm=True,
+                      tie_embeddings=True, dtype="float32", remat="none",
+                      max_cache_len=48)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    frames = RNG.standard_normal((2, 12, 64)).astype(np.float32)
+    batch = _batch(cfg, s=24, extra=lambda b: dict(frames=frames))
+    from repro.models import encdec as ED
+    enc = ED.encode(params, jnp.asarray(frames), cfg, REPLICATED)
+    hidden, _ = ED.decode_stack(params, batch["tokens"], enc, cfg, REPLICATED)
+    full = np.asarray(jnp.einsum("bsd,vd->bsv", hidden, params["embed"]))
+    lg, st, idx = api.prefill(params, {**batch,
+                                       "tokens": batch["tokens"][:, :12]})
+    np.testing.assert_allclose(np.asarray(lg), full[:, 11], rtol=3e-4,
+                               atol=3e-4)
+    for t in range(12, 16):
+        lg, st = api.decode_step(params, batch["tokens"][:, t], st, t)
+        np.testing.assert_allclose(np.asarray(lg), full[:, t], rtol=3e-4,
+                                   atol=3e-4)
+
+
+def test_vlm_decode_matches_teacher_forcing():
+    cfg = ModelConfig(name="v", family="vlm", num_layers=6,
+                      cross_attn_every=3, d_model=64, num_heads=4,
+                      num_kv_heads=2, d_ff=128, vocab_size=101, n_patches=8,
+                      vision_dim=24, dtype="float32", remat="none",
+                      max_cache_len=48)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    patches = RNG.standard_normal((2, 8, 24)).astype(np.float32)
+    batch = _batch(cfg, s=24, extra=lambda b: dict(patches=patches))
+    from repro.models import vision as VI
+    hidden, _ = VI.forward(params, batch["tokens"], jnp.asarray(patches),
+                           cfg, REPLICATED)
+    full = np.asarray(jnp.einsum("bsd,vd->bsv", hidden, params["unembed"]))
+    lg, st, idx = api.prefill(params, {**batch,
+                                       "tokens": batch["tokens"][:, :12]})
+    np.testing.assert_allclose(np.asarray(lg), full[:, 11], rtol=3e-4,
+                               atol=3e-4)
+    for t in range(12, 16):
+        lg, st = api.decode_step(params, batch["tokens"][:, t], st, t)
+        np.testing.assert_allclose(np.asarray(lg), full[:, t], rtol=3e-4,
+                                   atol=3e-4)

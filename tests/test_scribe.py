@@ -1,0 +1,89 @@
+import os
+
+import numpy as np
+import pytest
+
+from repro.data import (generate, LogGenConfig, deliver_batch, LogMover,
+                        DeliveryError, read_warehouse_hour, Oink)
+
+
+def test_exactly_once_under_faults(tmp_path):
+    log = generate(LogGenConfig(n_users=60, seed=3))
+    stats = deliver_batch(log.batch, str(tmp_path / "staging"),
+                          str(tmp_path / "wh"), crash_prob=0.10, seed=7)
+    assert stats["undelivered"] == 0
+    assert stats["messages"] == len(log.batch)      # no loss
+    assert stats["dupes"] > 0                       # faults actually fired
+    # and the warehouse parses back
+    hours = sorted(stats["hours"])
+    rows = read_warehouse_hour(str(tmp_path / "wh"), "client_events", hours[0])
+    assert all("event_name" in r for r in rows)
+
+
+def test_no_faults_no_dupes(tmp_path):
+    log = generate(LogGenConfig(n_users=20, seed=1))
+    stats = deliver_batch(log.batch, str(tmp_path / "staging"),
+                          str(tmp_path / "wh"), crash_prob=0.0, seed=1)
+    assert stats["dupes"] == 0
+    assert stats["messages"] == len(log.batch)
+
+
+def test_mover_requires_all_datacenters(tmp_path):
+    staging = tmp_path / "staging"
+    (staging / "dc0" / "cat" / "1").mkdir(parents=True)
+    mover = LogMover(str(staging), str(tmp_path / "wh"), ["dc0", "dc1"])
+    with pytest.raises(DeliveryError):
+        mover.move_hour("cat", 1)   # dc1 never staged
+    assert not (tmp_path / "wh" / "cat" / "1").exists()  # nothing committed
+
+
+def test_mover_idempotent(tmp_path):
+    staging = tmp_path / "staging"
+    for dc in ("dc0",):
+        (staging / dc / "cat" / "5").mkdir(parents=True)
+    mover = LogMover(str(staging), str(tmp_path / "wh"), ["dc0"])
+    s1 = mover.move_hour("cat", 5)
+    s2 = mover.move_hour("cat", 5)
+    assert not s1.get("skipped") and s2.get("skipped")
+
+
+def test_uncommitted_hour_unreadable(tmp_path):
+    os.makedirs(tmp_path / "wh" / "cat" / "9")
+    with pytest.raises(DeliveryError):
+        read_warehouse_hour(str(tmp_path / "wh"), "cat", 9)
+
+
+def test_oink_dependency_order_and_retry():
+    calls = []
+    flaky = {"n": 0}
+
+    def a(_):
+        calls.append("a")
+        return 1
+
+    def b(dep):
+        flaky["n"] += 1
+        if flaky["n"] == 1:
+            raise RuntimeError("transient")
+        calls.append("b")
+        return dep["a"] + 1
+
+    o = Oink()
+    o.add("b", b, deps=("a",), max_attempts=2)
+    o.add("a", a)
+    out = o.run()
+    assert calls == ["a", "b"]          # dependency order despite add order
+    assert out["b"] == 2                # retry succeeded
+    assert any(t.attempts == 2 for t in o.traces if t.name == "b")
+
+
+def test_oink_failure_skips_dependents():
+    def bad(_):
+        raise RuntimeError("boom")
+
+    o = Oink()
+    o.add("x", bad, max_attempts=1)
+    o.add("y", lambda d: 1, deps=("x",))
+    o.run()
+    ty = [t for t in o.traces if t.name == "y"][0]
+    assert not ty.success and "dependency" in ty.error

@@ -1,0 +1,111 @@
+"""End-to-end system test: the paper's full pipeline, log generation ->
+fault-injected Scribe delivery -> warehouse -> Oink jobs (dictionary,
+catalog, sequences, rollups) -> analytics -> behaviour-LM training."""
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import (EventBatch, EventCatalog, EventDictionary,
+                        SessionSequences, sessionize)
+from repro.core.oracle import sessionize_oracle
+from repro.data import (generate, LogGenConfig, deliver_batch,
+                        read_warehouse_hour, Oink, SessionBatchPipeline,
+                        PipelineConfig, lm_vocab_size)
+from repro.analytics import (count_pattern, funnel_from_patterns, summarize,
+                             NGramLM)
+from repro.models import ModelConfig, get_model
+from repro.train import OptConfig, Trainer, TrainerConfig
+
+
+def test_full_pipeline(tmp_path):
+    # 1. events are born on production hosts
+    log = generate(LogGenConfig(n_users=150, seed=11))
+
+    # 2. scribe delivery with crashes; exactly-once arrival in the warehouse
+    stats = deliver_batch(log.batch, str(tmp_path / "staging"),
+                          str(tmp_path / "wh"), crash_prob=0.06, seed=2)
+    assert stats["undelivered"] == 0
+    assert stats["messages"] == len(log.batch)
+
+    # 3. read back from the warehouse into a columnar batch
+    from repro.core import ClientEvent
+    rows = []
+    for hour in stats["hours"]:
+        rows.extend(read_warehouse_hour(str(tmp_path / "wh"),
+                                        "client_events", hour))
+    events = [ClientEvent(
+        event_initiator=r["event_initiator"], event_name=r["event_name"],
+        user_id=r["user_id"], session_id=r["session_id"], ip=r["ip"],
+        timestamp=r["timestamp"], event_details=r["event_details"])
+        for r in rows]
+    batch = EventBatch.from_events(events)
+    assert len(batch) == len(log.batch)
+
+    # 4. Oink schedules the daily jobs with dependencies
+    oink = Oink()
+    oink.add("dictionary",
+             lambda d: EventDictionary.build(batch.table, batch.name_id))
+    oink.add("catalog",
+             lambda d: EventCatalog.build(d["dictionary"], batch),
+             deps=("dictionary",))
+
+    def job_sequences(dep):
+        d = dep["dictionary"]
+        codes = np.asarray(d.encode_ids(batch.name_id))
+        s = sessionize(batch.user_id, batch.session_id, batch.timestamp,
+                       codes, batch.ip.astype(np.int64),
+                       max_sessions=len(batch), max_len=1024)
+        return SessionSequences.from_sessionized(s)
+
+    oink.add("sequences", job_sequences, deps=("dictionary",))
+    out = oink.run()
+    assert all(t.success for t in oink.traces), oink.report()
+
+    d, seqs, catalog = out["dictionary"], out["sequences"], out["catalog"]
+    d.verify()
+
+    # 5. sessionization agrees with the oracle on the delivered data
+    codes = np.asarray(d.encode_ids(batch.name_id))
+    want = sessionize_oracle(batch.user_id, batch.session_id,
+                             batch.timestamp, codes)
+    assert len(seqs) == len(want)
+
+    # 6. analytics over the materialized sequences
+    total, containing = count_pattern(seqs, d, "*:impression")
+    assert total > 0 and containing <= len(seqs)
+    reach = funnel_from_patterns(
+        seqs, d,
+        "*:signup:landing:form:signup_button:click",
+        "*:signup:form:form:submit_button:submit",
+        "*:signup:follow_suggestions:list:user:follow",
+        "*:signup:complete:page::impression")
+    counts = [c for _, c in reach]
+    assert counts == sorted(counts, reverse=True)
+    assert counts[0] > 0
+
+    rep = summarize(seqs, d)
+    assert rep.totals["sessions"] == len(seqs)
+    assert catalog.coverage()["names"] == len(batch.table)
+
+    # 7. a bigram model finds temporal signal in the behaviour
+    h1 = NGramLM.fit(seqs, 1, d.alphabet_size).cross_entropy(seqs)
+    h2 = NGramLM.fit(seqs, 2, d.alphabet_size).cross_entropy(seqs)
+    assert h2 < h1
+
+    # 8. the sequences train a behaviour LM end to end, loss decreases
+    vocab = lm_vocab_size(d.alphabet_size)
+    pipe = SessionBatchPipeline(seqs, PipelineConfig(seq_len=64,
+                                                     global_batch=8))
+    cfg = ModelConfig(name="e2e", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=vocab, dtype="float32", remat="none")
+    tr = Trainer(get_model(cfg), OptConfig(lr=1e-3, warmup_steps=5,
+                                           total_steps=30),
+                 TrainerConfig(total_steps=30, checkpoint_every=15,
+                               log_every=10,
+                               checkpoint_dir=str(tmp_path / "ckpt")))
+    res = tr.run(pipe)
+    hist = res["history"]
+    assert hist[-1][1]["loss"] < hist[0][1]["loss"]

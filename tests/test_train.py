@@ -1,0 +1,135 @@
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import (OptConfig, init_opt_state, apply_updates, schedule,
+                         compress_grads, CheckpointManager, Trainer,
+                         TrainerConfig, make_train_step)
+from repro.models import ModelConfig, get_model
+
+CFG = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                  num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=64,
+                  dtype="float32", remat="none")
+
+
+def _params():
+    return get_model(CFG).init(jax.random.PRNGKey(0))
+
+
+def test_adamw_matches_manual_reference():
+    ocfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=10, min_lr_frac=1.0,
+                     weight_decay=0.0, clip_norm=1e9)
+    p = dict(w=jnp.array([[1.0, -2.0]]))
+    g = dict(w=jnp.array([[0.5, 0.5]]))
+    st = init_opt_state(p, ocfg)
+    newp, newst, _ = apply_updates(p, g, st, ocfg)
+    # manual AdamW step 1: mu_hat = g, nu_hat = g^2 -> delta = g/|g|
+    want = p["w"] - 0.1 * (g["w"] / (jnp.abs(g["w"]) + 1e-8))
+    np.testing.assert_allclose(np.asarray(newp["w"]), np.asarray(want),
+                               rtol=1e-5)
+
+
+def test_clip_reduces_large_grads():
+    ocfg = OptConfig(lr=1e-2, clip_norm=1.0, warmup_steps=0, total_steps=10)
+    p = dict(w=jnp.ones((4, 4)))
+    g = dict(w=jnp.full((4, 4), 100.0))
+    st = init_opt_state(p, ocfg)
+    _, _, stats = apply_updates(p, g, st, ocfg)
+    assert float(stats["grad_norm"]) == pytest.approx(400.0)
+
+
+def test_nonfinite_step_skipped():
+    ocfg = OptConfig(lr=1e-2)
+    p = dict(w=jnp.ones((2, 2)))
+    g = dict(w=jnp.array([[jnp.inf, 0.0], [0.0, 0.0]]))
+    st = init_opt_state(p, ocfg)
+    newp, newst, stats = apply_updates(p, g, st, ocfg)
+    np.testing.assert_array_equal(np.asarray(newp["w"]), np.ones((2, 2)))
+    assert int(newst["skipped"]) == 1
+    # a following healthy step applies
+    g2 = dict(w=jnp.full((2, 2), 0.1))
+    newp2, newst2, _ = apply_updates(newp, g2, newst, ocfg)
+    assert not np.allclose(np.asarray(newp2["w"]), 1.0)
+    assert int(newst2["skipped"]) == 1
+
+
+def test_schedule_warmup_and_cosine():
+    ocfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                     min_lr_frac=0.1)
+    assert float(schedule(jnp.asarray(5), ocfg)) == pytest.approx(0.5)
+    assert float(schedule(jnp.asarray(10), ocfg)) == pytest.approx(1.0)
+    assert float(schedule(jnp.asarray(110), ocfg)) == pytest.approx(0.1)
+
+
+def test_error_feedback_compression_is_unbiased_over_time():
+    rng = np.random.default_rng(0)
+    g_true = dict(w=jnp.asarray(rng.standard_normal((32, 32)), jnp.float32))
+    err = dict(w=jnp.zeros((32, 32)))
+    acc_comp = np.zeros((32, 32))
+    steps = 50
+    for _ in range(steps):
+        comp, err = compress_grads(g_true, err, "ef_int8")
+        acc_comp += np.asarray(comp["w"])
+    # error feedback: sum of compressed ~= sum of true gradients
+    rel = np.linalg.norm(acc_comp - steps * np.asarray(g_true["w"])) / \
+        np.linalg.norm(steps * np.asarray(g_true["w"]))
+    assert rel < 0.01
+
+
+def test_sign_compression_direction():
+    g = dict(w=jnp.asarray([[3.0, -1.0]]))
+    comp, err = compress_grads(g, dict(w=jnp.zeros((1, 2))), "sign")
+    c = np.asarray(comp["w"])
+    assert c[0, 0] > 0 and c[0, 1] < 0
+    np.testing.assert_allclose(np.abs(c), np.mean(np.abs(np.asarray(g["w"]))))
+
+
+def test_checkpoint_roundtrip_and_checksum(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = dict(a=np.arange(6, dtype=np.float32).reshape(2, 3),
+                b=dict(c=np.ones(4, np.int32)))
+    mgr.save(3, tree)
+    assert mgr.latest_step() == 3
+    back = mgr.restore(tree)
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    # corrupt a leaf -> restore must fail integrity check
+    d = tmp_path / "step_00000003"
+    target = next(p for p in d.iterdir() if p.name.endswith(".npy"))
+    data = bytearray(target.read_bytes())
+    data[-1] ^= 0xFF
+    target.write_bytes(bytes(data))
+    with pytest.raises(IOError):
+        mgr.restore(tree)
+
+
+def test_checkpoint_gc_keeps_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = dict(a=np.zeros(2))
+    for step in (1, 2, 3, 4):
+        mgr.save(step, tree)
+    names = sorted(p.name for p in tmp_path.iterdir()
+                   if p.name.startswith("step_"))
+    assert names == ["step_00000003", "step_00000004"]
+
+
+def test_trainer_nan_watchdog(tmp_path):
+    api = get_model(CFG)
+
+    class PoisonPipeline:
+        def batches_per_epoch(self):
+            return 4
+
+        def batch_at(self, epoch, step):
+            b = dict(tokens=np.ones((2, 8), np.int32),
+                     targets=np.ones((2, 8), np.int32),
+                     loss_mask=np.full((2, 8), np.inf, np.float32))
+            return b
+
+    tr = Trainer(api, OptConfig(), TrainerConfig(
+        total_steps=50, checkpoint_every=1000, log_every=1000,
+        max_consecutive_skips=3, checkpoint_dir=str(tmp_path)))
+    with pytest.raises(RuntimeError, match="non-finite"):
+        tr.run(PoisonPipeline(), resume=False)
