@@ -10,7 +10,7 @@ the int32 codes directly.
 
 The histogram pass is the JAX analogue of the daily Oink job that scans the
 client-event logs: a ``segment_sum`` over name ids (and, distributed, a
-``psum`` across the data axis — see core/distributed.py).
+``psum`` across the data axis — see dist/collectives.py).
 """
 from __future__ import annotations
 

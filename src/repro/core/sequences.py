@@ -78,13 +78,15 @@ class SessionSequences:
     def session_symbols(self, i: int) -> np.ndarray:
         return self.symbols[i, : int(self.stored_length()[i])]
 
+    def session_string(self, i: int) -> str:
+        """One session in the paper's representation: a valid unicode string,
+        one char per event, small code point = frequent event."""
+        cps = code_to_codepoint(self.session_symbols(i))
+        return "".join(chr(int(c)) for c in cps)
+
     def as_unicode_strings(self) -> list[str]:
         """The paper's representation: one valid unicode string per session."""
-        out = []
-        for i in range(len(self)):
-            cps = code_to_codepoint(self.session_symbols(i))
-            out.append("".join(chr(int(c)) for c in cps))
-        return out
+        return [self.session_string(i) for i in range(len(self))]
 
     @staticmethod
     def from_unicode_strings(strings: list[str], **meta) -> "SessionSequences":
@@ -133,11 +135,13 @@ class SessionSequences:
         )
 
     def to_json_rows(self, limit: int = 10) -> str:
+        # Materialize only the strings actually emitted — the previous
+        # version rebuilt every session string once per row (O(S^2)).
         rows = []
         for i in range(min(limit, len(self))):
             rows.append(dict(
                 user_id=int(self.user_id[i]), session_id=int(self.session_id[i]),
                 ip=int(self.ip[i]), duration=int(self.duration_s[i]),
-                session_sequence=self.as_unicode_strings()[i]
+                session_sequence=self.session_string(i)
                 if i < 3 else f"<{int(self.length[i])} symbols>"))
         return json.dumps(rows, ensure_ascii=True, indent=2)

@@ -5,7 +5,7 @@ The paper reconstructs sessions with a Hadoop group-by on
 same dataflow is a single fused lexicographic sort (``jax.lax.sort`` with
 ``num_keys=3`` over user, session, timestamp) followed by segment-boundary
 detection and ``segment_*`` reductions — no shuffle, no reducers, one XLA
-program. The distributed variant (core/distributed.py) prepends the paper's
+program. The distributed variant (dist/collectives.py) prepends the paper's
 shuffle as an ``all_to_all`` keyed repartition over the mesh ``data`` axis.
 
 Identifiers and timestamps are int64; JAX defaults to 32-bit, so the jitted

@@ -1,0 +1,35 @@
+"""Unified distribution layer — the paper's consolidation move applied to
+parallelism.
+
+The paper replaces application-specific logging with one "client events"
+layer every downstream job consumes; ``repro.dist`` does the same for
+distribution machinery. Everything that touches a mesh lives here:
+
+* ``sharding``    — logical-axis sharding rules (``ShardingRules``,
+  ``constrain``, ``tree_spec``, ``arch_rules``, ``adapt_rules_for_mesh``)
+* ``mesh``        — mesh construction (production pods + host test meshes)
+* ``collectives`` — keyed repartition (all_to_all shuffle), fixed-capacity
+  bucketing, distributed sessionize / histogram
+* ``compat``      — version-portable wrappers over the jax APIs that moved
+  between 0.4.x and 0.7.x (``shard_map``, mesh activation, axis types)
+
+``repro.core.distributed`` and ``repro.launch.mesh`` remain as thin
+back-compat re-export shims.
+"""
+from .compat import shard_map, use_mesh, make_mesh, abstract_mesh, \
+    active_mesh
+from .sharding import (ShardingRules, REPLICATED, LOGICAL_AXES, constrain,
+                       tree_spec, arch_rules, adapt_rules_for_mesh)
+from .mesh import make_production_mesh, make_host_mesh
+from .collectives import (mix64, shard_of_user, bucket_by_destination,
+                          keyed_all_to_all, make_distributed_sessionize,
+                          make_distributed_histogram)
+
+__all__ = [
+    "shard_map", "use_mesh", "make_mesh", "abstract_mesh", "active_mesh",
+    "ShardingRules", "REPLICATED", "LOGICAL_AXES", "constrain",
+    "tree_spec", "arch_rules", "adapt_rules_for_mesh",
+    "make_production_mesh", "make_host_mesh",
+    "mix64", "shard_of_user", "bucket_by_destination", "keyed_all_to_all",
+    "make_distributed_sessionize", "make_distributed_histogram",
+]

@@ -1,0 +1,184 @@
+"""Reusable collectives (moved here from repro.core.distributed).
+
+Distributed sessionization is the paper's Hadoop shuffle on a TPU mesh.
+The paper reconstructs sessions with a MapReduce shuffle keyed on
+``(user_id, session_id)``. On a TPU pod the identical dataflow is:
+
+1. each ``data``-axis shard holds an arbitrary slice of the hour's events
+   (that is exactly how the log mover deposits them: partially ordered,
+   arbitrarily partitioned);
+2. every shard buckets its rows by ``hash(user_id) % n_shards`` and an
+   ``all_to_all`` collective performs the keyed repartition over ICI — all
+   events of a user land on one shard;
+3. each shard runs the local fused sort + segment pass (sessionize.py).
+
+Bucketing uses fixed per-destination capacity (the MoE dispatch pattern):
+overflowed rows are counted and reported, never silently lost — the caller
+re-runs with a larger capacity factor, mirroring how the production job
+sizes itself from the previous histogram job.
+
+The primitives are deliberately generic: ``bucket_by_destination`` handles
+payload rows of any rank (the MoE expert dispatch in models/moe.py routes
+(T, D) activations through the same function the sessionizer uses for
+scalar event columns), and ``keyed_all_to_all`` is the bucketing +
+``all_to_all`` repartition as one reusable stage for future pipeline work.
+
+Also here: the distributed histogram (local segment_sum + psum) used by the
+dictionary-building job.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .compat import shard_map, use_mesh
+from ..core.sessionize import _sessionize, DEFAULT_GAP_MS
+
+
+def mix64(x: jax.Array) -> jax.Array:
+    """splitmix64 finalizer — avalanche so modulo sharding is uniform."""
+    x = x.astype(jnp.uint64)
+    x = (x ^ (x >> 30)) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> 27)) * jnp.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> 31)
+    return x
+
+
+def shard_of_user(user_id: jax.Array, n_shards: int) -> jax.Array:
+    return (mix64(user_id) % jnp.uint64(n_shards)).astype(jnp.int32)
+
+
+def bucket_by_destination(cols: dict[str, jax.Array], dest: jax.Array,
+                          n_dest: int, capacity: int):
+    """Scatter rows into (n_dest, capacity) buckets.
+
+    Rows are stably sorted by destination, positions within a destination
+    are contiguous ranks; rows ranked beyond capacity are dropped (counted,
+    never silent). Payload columns may carry trailing dims — buckets get
+    shape (n_dest, capacity, *payload).
+
+    Returns ``(buckets, order, dest_sorted, pos, dropped)``; callers that
+    only repartition use ``(buckets, dropped)``, the MoE combine path also
+    needs the sort permutation to route results back.
+    """
+    n = dest.shape[0]
+    order = jnp.argsort(dest, stable=True)
+    d_sorted = dest[order]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    start = jax.ops.segment_min(idx, d_sorted, num_segments=n_dest)
+    pos = idx - start[d_sorted]
+    dropped = jnp.sum((pos >= capacity).astype(jnp.int32))
+    out = {}
+    for name, v in cols.items():
+        v_sorted = v[order]
+        buf = jnp.zeros((n_dest, capacity) + v.shape[1:], v.dtype)
+        out[name] = buf.at[d_sorted, pos].set(v_sorted, mode="drop")
+    return out, order, d_sorted, pos, dropped
+
+
+def keyed_all_to_all(cols: dict[str, jax.Array], dest: jax.Array,
+                     axis: str, n_shards: int, capacity: int):
+    """Keyed repartition over mesh axis ``axis`` (call inside shard_map).
+
+    Buckets local rows by destination shard and performs the all_to_all
+    shuffle; returns flat received columns of length ``n_shards * capacity``
+    (zero-padded — receivers must mask on a validity column) plus the local
+    dropped-row count.
+    """
+    buckets, _, _, _, dropped = bucket_by_destination(
+        cols, dest, n_shards, capacity)
+    recv = {k: jax.lax.all_to_all(v, axis, split_axis=0, concat_axis=0)
+            for k, v in buckets.items()}
+    flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in recv.items()}
+    return flat, dropped
+
+
+def make_distributed_sessionize(mesh: Mesh, axis: str = "data", *,
+                                gap_ms: int = DEFAULT_GAP_MS,
+                                capacity_factor: float = 2.0,
+                                max_sessions_per_shard: int,
+                                max_len: int):
+    """Build a jitted distributed sessionize over ``mesh[axis]``.
+
+    Inputs are event columns sharded on the leading dim over ``axis``;
+    outputs are per-shard Sessionized fields stacked on a leading shard dim
+    (still sharded over ``axis``), plus the global dropped-row count.
+    """
+    n_shards = mesh.shape[axis]
+
+    def local_fn(user_id, session_id, timestamp, code, ip, valid):
+        n_local = user_id.shape[0]
+        capacity = int(np.ceil(n_local * capacity_factor / n_shards))
+        dest = shard_of_user(user_id, n_shards)
+        # Invalid rows must not consume capacity: route them to shard of
+        # their hash anyway but mark invalid (they're masked later); cheaper
+        # than compaction and correct because sessionize drops invalids.
+        cols = dict(user_id=user_id, session_id=session_id,
+                    timestamp=timestamp, code=code, ip=ip,
+                    valid=valid.astype(jnp.int32))
+        flat, dropped = keyed_all_to_all(cols, dest, axis, n_shards, capacity)
+        # Received padding rows: zero-initialized buckets have valid=0.
+        out = _sessionize(
+            flat["user_id"], flat["session_id"], flat["timestamp"],
+            flat["code"], flat["ip"], flat["valid"].astype(bool),
+            gap_ms=gap_ms, max_sessions=max_sessions_per_shard,
+            max_len=max_len)
+        total_dropped = jax.lax.psum(dropped, axis)
+        # Add leading per-shard dim for out_specs concatenation.
+        out = {k: v[None] for k, v in out.items()}
+        return out, total_dropped[None]
+
+    in_spec = P(axis)
+    fn = shard_map(local_fn, mesh=mesh,
+                   in_specs=(in_spec,) * 6,
+                   out_specs=({k: P(axis) for k in
+                               ("symbols", "length", "user_id", "session_id",
+                                "ip", "start_ts", "duration_s", "num_sessions",
+                                "num_events", "truncated")}, P(axis)))
+
+    def wrapper(user_id, session_id, timestamp, code, ip=None, valid=None):
+        n = len(user_id)
+        if ip is None:
+            ip = np.zeros(n, np.int64)
+        if valid is None:
+            valid = np.ones(n, bool)
+        with enable_x64():
+            with use_mesh(mesh):
+                out, dropped = jax.jit(fn)(
+                    jnp.asarray(user_id, jnp.int64),
+                    jnp.asarray(session_id, jnp.int64),
+                    jnp.asarray(timestamp, jnp.int64),
+                    jnp.asarray(code, jnp.int32),
+                    jnp.asarray(ip, jnp.int64),
+                    jnp.asarray(valid, bool))
+        return out, int(np.asarray(dropped)[0])
+
+    return wrapper
+
+
+def make_distributed_histogram(mesh: Mesh, axis: str = "data", *,
+                               num_names: int):
+    """Distributed event histogram: local segment_sum + psum (the daily
+    dictionary job, §4.2, over the mesh instead of a Pig job)."""
+
+    def local_fn(name_ids, valid):
+        ids = jnp.where(valid, name_ids, num_names)
+        local = jax.ops.segment_sum(
+            jnp.ones_like(ids, jnp.int32), ids,
+            num_segments=num_names + 1)[:num_names]
+        return jax.lax.psum(local, axis)
+
+    fn = shard_map(local_fn, mesh=mesh, in_specs=(P(axis), P(axis)),
+                   out_specs=P())
+
+    def wrapper(name_ids, valid=None):
+        if valid is None:
+            valid = np.ones(len(name_ids), bool)
+        with use_mesh(mesh):
+            return np.asarray(jax.jit(fn)(
+                jnp.asarray(name_ids, jnp.int32), jnp.asarray(valid, bool)))
+
+    return wrapper

@@ -1,0 +1,28 @@
+"""Mesh construction (moved here from repro.launch.mesh).
+
+FUNCTIONS, not module-level constants — importing this module never touches
+jax device state. Single pod: (data=16, model=16) = 256 chips of TPU v5e;
+multi-pod: (pod=2, data=16, model=16) = 512 chips, the 'pod' axis crossing
+DCI (pure data parallelism there).
+"""
+from __future__ import annotations
+
+from .compat import make_mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         data: int = 16, model: int = 16):
+    """(data x model) must stay 256 chips/pod; the (16, 16) default is the
+    dry-run baseline, per-arch refactorizations (e.g. (32, 8) for qwen2,
+    (64, 4) for narrow models) are §Perf levers."""
+    assert data * model == 256, (data, model)
+    shape = (2, data, model) if multi_pod else (data, model)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pod: int | None = None):
+    """Small explicit meshes for tests/examples on host devices."""
+    if pod is not None:
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

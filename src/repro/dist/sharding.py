@@ -1,0 +1,241 @@
+"""Logical-axis sharding rules: one vocabulary for the whole tree.
+
+Model code never names mesh axes. Every tensor dimension carries a
+*logical* axis name ("heads", "mlp", "expert", ...) and a single
+``ShardingRules`` instance maps logical names to mesh axes. That keeps the
+mapping in exactly one place — the same consolidation the paper performs on
+log formats — so changing a parallelism layout (or degrading onto a smaller
+elastic mesh) never touches model code.
+
+* ``ShardingRules``          frozen logical->mesh mapping; ``REPLICATED``
+                             is the all-None instance (fully replicated).
+* ``constrain(x, rules, *ax)``  in-graph ``with_sharding_constraint`` keyed
+                             by logical names; a no-op when the resolved
+                             spec is fully replicated or no mesh is active.
+* ``tree_spec(axes, rules)`` map a pytree of logical-axis tuples (the
+                             ``*_axes`` trees next to every init) to
+                             ``PartitionSpec``s.
+* ``arch_rules(...)``        per-architecture layouts: attention-head
+                             (dense/encdec/vlm), expert (moe), state-space
+                             (mamba2), and their union (hybrid).
+* ``adapt_rules_for_mesh``   degrade rules onto a smaller/elastic mesh by
+                             dropping axes the mesh doesn't have (or has at
+                             size 1) — the elastic-restart path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .compat import active_mesh
+
+# One field per logical axis. Params use embed/act_embed/heads/kv_heads/
+# head_dim/mlp/vocab/expert/state/ssm_heads/layers; activations and decode
+# state add batch/seq/logits_seq/cache_seq/frames.
+LOGICAL_AXES = (
+    "batch", "seq", "logits_seq", "cache_seq", "frames",
+    "embed", "act_embed", "vocab",
+    "heads", "kv_heads", "head_dim", "mlp", "expert",
+    "state", "ssm_heads", "layers",
+)
+
+# A rule value is None (replicated), a mesh-axis name, or a tuple of them.
+Rule = None | str | tuple[str | None, ...]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis name -> mesh axis (or axes, or None = replicated)."""
+    batch: Rule = None
+    seq: Rule = None
+    logits_seq: Rule = None
+    cache_seq: Rule = None
+    frames: Rule = None
+    embed: Rule = None
+    act_embed: Rule = None
+    vocab: Rule = None
+    heads: Rule = None
+    kv_heads: Rule = None
+    head_dim: Rule = None
+    mlp: Rule = None
+    expert: Rule = None
+    state: Rule = None
+    ssm_heads: Rule = None
+    layers: Rule = None
+
+    def physical(self, logical: str | None) -> Rule:
+        """Mesh axes for one logical axis name (None passes through)."""
+        if logical is None:
+            return None
+        if logical not in LOGICAL_AXES:
+            raise ValueError(f"unknown logical axis {logical!r}; "
+                             f"known: {LOGICAL_AXES}")
+        return getattr(self, logical)
+
+    def spec(self, *logical_axes: str | None) -> P:
+        """PartitionSpec for one tensor, one logical name per dimension.
+
+        A mesh axis may appear only once in a PartitionSpec; when two
+        dimensions resolve to the same mesh axis the leftmost dimension
+        wins and later occurrences degrade to replicated. That makes rule
+        composition safe: e.g. ``cache_seq=("data", "model")`` with
+        ``kv_heads="model"`` in the same KV-cache spec cannot produce a
+        DuplicateSpec error, it just keeps the earlier assignment.
+        """
+        used: set[str] = set()
+        entries = []
+        for logical in logical_axes:
+            phys = self.physical(logical)
+            if phys is None:
+                entries.append(None)
+                continue
+            axes = phys if isinstance(phys, tuple) else (phys,)
+            kept = tuple(a for a in axes if a is not None and a not in used)
+            used.update(kept)
+            if not kept:
+                entries.append(None)
+            elif isinstance(phys, tuple):
+                entries.append(kept)
+            else:
+                entries.append(kept[0])
+        return P(*entries)
+
+
+REPLICATED = ShardingRules()
+
+_FIELDS = tuple(f.name for f in dataclasses.fields(ShardingRules))
+
+
+def constrain(x, rules: ShardingRules, *logical_axes: str | None):
+    """``with_sharding_constraint`` by logical axis names.
+
+    No-op when the resolved spec is fully replicated (the REPLICATED /
+    single-device path) or when no mesh is active — so model code can call
+    it unconditionally.
+    """
+    spec = rules.spec(*logical_axes)
+    if all(entry is None for entry in spec):
+        return x
+    if active_mesh() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _is_axes_leaf(node) -> bool:
+    return node is None or (
+        isinstance(node, tuple)
+        and all(a is None or isinstance(a, str) for a in node))
+
+
+def tree_spec(axes_tree, rules: ShardingRules):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs.
+
+    Leaves are tuples of logical names (None entries = replicated dims,
+    ``()`` = scalar) exactly as produced by the ``*_axes`` functions in
+    ``repro.models``.
+    """
+    return jax.tree.map(
+        lambda axes: P() if axes is None else rules.spec(*axes),
+        axes_tree, is_leaf=_is_axes_leaf)
+
+
+def tree_shardings(axes_tree, rules: ShardingRules, mesh: Mesh):
+    """Like ``tree_spec`` but returns device-placeable ``NamedSharding``s."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_spec(axes_tree, rules))
+
+
+def adapt_rules_for_mesh(rules: ShardingRules, mesh: Mesh) -> ShardingRules:
+    """Degrade ``rules`` onto ``mesh``: drop mesh axes the mesh doesn't
+    have, or has at trivial size 1 (a 1-device mesh drops every
+    model-parallel axis and yields fully-replicated rules).
+
+    Idempotent, so callers can adapt defensively at every mesh boundary —
+    the elastic reshard/restore path relies on that.
+    """
+    names = set(mesh.axis_names)
+
+    def adapt(value: Rule) -> Rule:
+        if value is None:
+            return None
+        axes = value if isinstance(value, tuple) else (value,)
+        kept = tuple(a for a in axes
+                     if a is not None and a in names and mesh.shape[a] > 1)
+        if not kept:
+            return None
+        return kept if isinstance(value, tuple) else kept[0]
+
+    return ShardingRules(**{f: adapt(getattr(rules, f)) for f in _FIELDS})
+
+
+def _divides(dim: int, size: int) -> bool:
+    return dim > 0 and size > 0 and dim % size == 0
+
+
+def arch_rules(base: ShardingRules, mesh: Mesh, *, family: str | None = None,
+               num_heads: int = 0, num_kv_heads: int = 0, d_ff: int = 0,
+               vocab: int = 0, num_experts: int = 0, ssm_nheads: int = 0,
+               d_inner: int = 0) -> ShardingRules:
+    """Per-architecture sharding layout for ``mesh``.
+
+    Data parallelism goes over ("pod", "data") — whichever exist — and the
+    "model" axis is consumed by the family's natural tensor-parallel dims:
+
+    * dense / encdec / vlm — attention heads + kv heads + mlp + vocab
+      (megatron-style head/ffn split);
+    * moe   — the expert dim (EP); attention heads still split, but the
+      within-expert ffn dim stays unsharded (it shares tensors with the
+      expert dim, which already holds the model axis);
+    * ssm (mamba2) — state-space heads + inner width; the state dim stays
+      unsharded (it shares the SSM-state tensor with ssm_heads);
+    * hybrid — union of the attention and state-space layouts.
+
+    A dim is only sharded when its size divides the model-axis size.
+    Explicit entries in ``base`` win over the computed layout. The result
+    is pre-adapted to ``mesh``.
+    """
+    if family is None:
+        if num_experts > 0:
+            family = "moe"
+        elif ssm_nheads > 0:
+            family = "hybrid" if num_heads > 0 else "ssm"
+        else:
+            family = "dense"
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    msize = mesh.shape.get("model", 1)
+    mp = "model" if "model" in mesh.axis_names else None
+
+    out: dict[str, Rule] = dict(batch=dp or None)
+    if mp is not None:
+        attn_like = family in ("dense", "moe", "hybrid", "encdec", "vlm")
+        if attn_like:
+            if _divides(num_heads, msize):
+                out["heads"] = mp
+            if _divides(num_kv_heads, msize):
+                out["kv_heads"] = mp
+        if family in ("dense", "encdec", "vlm") and _divides(d_ff, msize):
+            out["mlp"] = mp
+        if family == "moe" and _divides(num_experts, msize):
+            out["expert"] = mp
+        if family in ("ssm", "hybrid"):
+            if _divides(ssm_nheads, msize):
+                out["ssm_heads"] = mp
+            # hybrid uses "mlp" for both the attention block's d_ff and the
+            # mamba inner width — the split needs both to divide
+            if _divides(d_inner, msize) and (
+                    family == "ssm" or _divides(d_ff, msize)):
+                out["mlp"] = mp
+        if _divides(vocab, msize):
+            out["vocab"] = mp
+        else:
+            # fall back to sharding the logits seq dim (layers.apply_unembed
+            # uses logits_seq only while vocab is unsharded)
+            out["logits_seq"] = mp
+
+    merged = {f: (getattr(base, f) if getattr(base, f) is not None
+                  else out.get(f)) for f in _FIELDS}
+    return adapt_rules_for_mesh(ShardingRules(**merged), mesh)

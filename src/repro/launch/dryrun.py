@@ -95,7 +95,8 @@ def collective_bytes(hlo_text: str) -> dict:
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
              overrides: dict | None = None, tag: str = "") -> dict:
-    from .mesh import make_production_mesh
+    from ..dist.compat import cost_analysis, use_mesh
+    from ..dist.mesh import make_production_mesh
     from .shapes import make_cell, cell_supported, SHAPES, Shape
 
     ok, reason = cell_supported(arch, shape_name)
@@ -114,14 +115,14 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
     cell = make_cell(arch, shape_name, mesh, overrides)
     fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                  donate_argnums=cell.donate_argnums)
-    with mesh:  # mesh context: with_sharding_constraint(P) binds here
+    with use_mesh(mesh):  # with_sharding_constraint(P) binds here
         lowered = fn.lower(*cell.args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis(compiled)
     result = dict(
         arch=arch, shape=shape_name, mesh=mesh_kind, mode=mode, tag=tag,
         skipped=False, overrides=overrides or {},

@@ -1,32 +1,10 @@
-"""Production mesh construction.
+"""Back-compat shim: mesh construction moved to :mod:`repro.dist.mesh`
+(the unified distribution layer). Re-exports the old public names; new
+code should import from ``repro.dist``.
 
-A FUNCTION, not a module-level constant — importing this module never
-touches jax device state. Single pod: (data=16, model=16) = 256 chips of
-TPU v5e; multi-pod: (pod=2, data=16, model=16) = 512 chips, the 'pod' axis
-crossing DCI (pure data parallelism there).
+Per-arch mesh refactorizations (e.g. (32, 8) for qwen2, (64, 4) for narrow
+models) remain §Perf levers — see ROADMAP "Open items".
 """
-from __future__ import annotations
+from ..dist.mesh import make_production_mesh, make_host_mesh
 
-import jax
-from jax.sharding import AxisType
-
-
-def make_production_mesh(*, multi_pod: bool = False,
-                         data: int = 16, model: int = 16):
-    """(data x model) must stay 256 chips/pod; the (16, 16) default is the
-    dry-run baseline, per-arch refactorizations (e.g. (32, 8) for qwen2,
-    (64, 4) for narrow models) are §Perf levers."""
-    assert data * model == 256, (data, model)
-    shape = (2, data, model) if multi_pod else (data, model)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
-
-
-def make_host_mesh(data: int = 1, model: int = 1, pod: int | None = None):
-    """Small explicit meshes for tests/examples on host devices."""
-    if pod is not None:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+__all__ = ["make_production_mesh", "make_host_mesh"]

@@ -75,14 +75,13 @@ def cell_config(arch: str, shape_name: str, overrides: dict | None = None
 
 def rules_for_cell(cfg: ModelConfig, shape: Shape, mesh: Mesh,
                    base: ShardingRules = ShardingRules()) -> ShardingRules:
-    rules = arch_rules(base, mesh, num_heads=cfg.num_heads,
+    ssm = cfg.family in ("ssm", "hybrid")
+    rules = arch_rules(base, mesh, family=cfg.family,
+                       num_heads=cfg.num_heads,
                        num_kv_heads=cfg.num_kv_heads, d_ff=cfg.d_ff,
-                       vocab=cfg.vocab_size, num_experts=cfg.num_experts)
-    if cfg.family in ("ssm", "hybrid"):
-        if cfg.ssm_nheads % max(mesh.shape.get("model", 1), 1):
-            rules = replace(rules, ssm_heads=None)
-        if cfg.d_inner % max(mesh.shape.get("model", 1), 1):
-            rules = replace(rules, mlp=None)
+                       vocab=cfg.vocab_size, num_experts=cfg.num_experts,
+                       ssm_nheads=cfg.ssm_nheads if ssm else 0,
+                       d_inner=cfg.d_inner if ssm else 0)
     if shape.kind in ("prefill", "decode"):
         if rules.cache_seq is None and rules.kv_heads is None:
             rules = replace(rules, cache_seq="model")

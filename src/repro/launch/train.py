@@ -41,10 +41,11 @@ def main():
     from ..core import EventDictionary, SessionSequences, sessionize
     from ..data import (generate, LogGenConfig, SessionBatchPipeline,
                         PipelineConfig, lm_vocab_size)
+    from ..dist.compat import use_mesh
+    from ..dist.mesh import make_host_mesh
     from ..dist.sharding import ShardingRules, adapt_rules_for_mesh
     from ..models import get_model
     from ..train import OptConfig, Trainer, TrainerConfig
-    from .mesh import make_host_mesh
 
     log = generate(LogGenConfig(n_users=args.users, seed=0))
     b = log.batch
@@ -85,7 +86,7 @@ def main():
                      f"{m['steps_per_s']:.2f} steps/s", flush=True))
 
     if mesh is not None:
-        with mesh:
+        with use_mesh(mesh):
             out = tr.run(pipe)
     else:
         out = tr.run(pipe)

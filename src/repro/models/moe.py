@@ -8,9 +8,9 @@ Two implementations sharing one routing definition (top-k softmax gating):
   GShard/DeepSpeed-MoE dance with explicit collectives:
 
     1. local top-k routing on each data shard;
-    2. capacity-bucketed scatter by destination expert shard (the same
-       fixed-capacity pattern as core/distributed.py — overflow is counted
-       token dropping, standard for capacity-factor MoE);
+    2. capacity-bucketed scatter by destination expert shard (the shared
+       dist.collectives.bucket_by_destination primitive — overflow is
+       counted token dropping, standard for capacity-factor MoE);
     3. ``all_to_all`` over the expert (model) axis;
     4. second-level local bucketing by expert, one grouped einsum per
        (E_local, C, D) x (E_local, D, F) — zero overcompute, all MXU;
@@ -33,6 +33,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from .config import ModelConfig
 from . import layers as L
+from ..dist.compat import shard_map
+from ..dist.collectives import bucket_by_destination as _bucket
 from ..dist.sharding import ShardingRules, constrain
 
 
@@ -88,26 +90,6 @@ def moe_ffn_dense(x, p, cfg: ModelConfig, rules: ShardingRules):
     gate = jnp.einsum("tke,tk->et", onehot, w).astype(dt)             # (E,T)
     y = jnp.einsum("etd,et->td", h, gate)
     return y.reshape(b, s, d), jnp.zeros((), jnp.int32)
-
-
-def _bucket(cols: dict[str, jax.Array], dest: jax.Array, n_dest: int,
-            capacity: int):
-    """Rows -> (n_dest, capacity) buckets; returns buckets + dropped count.
-    Same fixed-capacity pattern as core.distributed._bucket_by_destination,
-    generalized to 2-D payloads."""
-    n = dest.shape[0]
-    order = jnp.argsort(dest, stable=True)
-    d_sorted = dest[order]
-    idx = jnp.arange(n, dtype=jnp.int32)
-    start = jax.ops.segment_min(idx, d_sorted, num_segments=n_dest)
-    pos = idx - start[d_sorted]
-    dropped = jnp.sum((pos >= capacity).astype(jnp.int32))
-    out = {}
-    for name, v in cols.items():
-        v_sorted = v[order]
-        buf = jnp.zeros((n_dest, capacity) + v.shape[1:], v.dtype)
-        out[name] = buf.at[d_sorted, pos].set(v_sorted, mode="drop")
-    return out, order, d_sorted, pos, dropped
 
 
 def moe_ffn_ep(x, p, cfg: ModelConfig, rules: ShardingRules, mesh: Mesh):
@@ -191,12 +173,11 @@ def moe_ffn_ep(x, p, cfg: ModelConfig, rules: ShardingRules, mesh: Mesh):
     s = x.shape[1]
     seq_ax = ep if (s % m == 0 and s >= m) else None
     wspec = P(ep, None, None)
-    out = jax.shard_map(
+    out = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(dp if dp else None, seq_ax, None),
                   P(None, None), wspec, wspec, wspec),
         out_specs=(P(dp if dp else None, seq_ax, None), P(ep)),
-        check_vma=False,
         # bf16-cast BEFORE the shard_map: the in_specs reshard is the FSDP
         # re-gather, and it must move 2-byte weights, not the f32 masters
         # (§Perf dbrx iteration: halves the dominant all-gather volume).

@@ -16,7 +16,7 @@ from typing import Any, Callable
 import jax
 
 from .config import ModelConfig
-from ..dist.sharding import ShardingRules, REPLICATED
+from ..dist.sharding import ShardingRules, REPLICATED, adapt_rules_for_mesh
 from . import transformer, mamba2, hybrid, encdec, vision
 
 
@@ -35,6 +35,11 @@ class ModelApi:
 
 def get_model(cfg: ModelConfig, mesh=None,
               rules: ShardingRules = REPLICATED) -> ModelApi:
+    if mesh is not None:
+        # Single resolution point: every architecture's rules pass through
+        # the unified adapt so a smaller/elastic mesh degrades cleanly
+        # (adapt is idempotent — pre-adapted rules are unchanged).
+        rules = adapt_rules_for_mesh(rules, mesh)
     fam = cfg.family
     if fam in ("dense", "moe"):
         return ModelApi(

@@ -1,0 +1,146 @@
+"""Deterministic mini-hypothesis, used only when the real package is absent.
+
+The container image does not ship ``hypothesis`` and installing packages is
+off the table, so ``conftest.py`` aliases this module into ``sys.modules``
+as a fallback. It implements exactly the surface the suite uses —
+``given``, ``settings``, ``strategies.integers/lists/sets/from_regex`` —
+by running each property test over a fixed number of seeded random
+examples (seeded per test name, so runs are reproducible). No shrinking;
+a failure reports the falsifying example verbatim.
+"""
+from __future__ import annotations
+
+import random
+import re
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def _lists(elements: _Strategy, *, min_size: int = 0,
+           max_size: int = 10) -> _Strategy:
+    def draw(r):
+        return [elements.example(r)
+                for _ in range(r.randint(min_size, max_size))]
+    return _Strategy(draw)
+
+
+def _sets(elements: _Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(r):
+        target = r.randint(min_size, max_size)
+        out: set = set()
+        for _ in range(1000):
+            if len(out) >= target:
+                break
+            out.add(elements.example(r))
+        if len(out) < min_size:
+            raise RuntimeError("set strategy: element domain too small for "
+                               f"min_size={min_size}")
+        return out
+    return _Strategy(draw)
+
+
+def _expand_class(spec: str) -> list[str]:
+    out, i = [], 0
+    while i < len(spec):
+        if i + 2 < len(spec) and spec[i + 1] == "-":
+            out.extend(chr(c)
+                       for c in range(ord(spec[i]), ord(spec[i + 2]) + 1))
+            i += 3
+        else:
+            out.append(spec[i])
+            i += 1
+    return out
+
+
+def _from_regex(pattern: str, *, fullmatch: bool = False) -> _Strategy:
+    """Generator for simple patterns: literals, [...] classes (with ranges),
+    and {m,n} / * / + / ? quantifiers. Every draw is verified against the
+    real ``re`` engine so an unsupported construct fails loudly instead of
+    producing wrong data."""
+    parts, i = [], 0
+    while i < len(pattern):
+        c = pattern[i]
+        if c == "[":
+            j = pattern.index("]", i)
+            chars, i = _expand_class(pattern[i + 1:j]), j + 1
+        elif c == "\\":
+            chars, i = [pattern[i + 1]], i + 2
+        else:
+            chars, i = [c], i + 1
+        lo = hi = 1
+        if i < len(pattern):
+            q = pattern[i]
+            if q == "{":
+                j = pattern.index("}", i)
+                spec = pattern[i + 1:j].split(",")
+                lo = int(spec[0])
+                hi = int(spec[-1]) if spec[-1] else lo + 8
+                i = j + 1
+            elif q in "*+?":
+                lo, hi = (0, 8) if q == "*" else (1, 8) if q == "+" else (0, 1)
+                i += 1
+        parts.append((chars, lo, hi))
+
+    def draw(r):
+        s = "".join(r.choice(chars)
+                    for chars, lo, hi in parts
+                    for _ in range(r.randint(lo, hi)))
+        ok = re.fullmatch(pattern, s) if fullmatch else re.match(pattern, s)
+        if not ok:
+            raise RuntimeError(f"mini from_regex cannot generate for "
+                               f"{pattern!r} (produced {s!r})")
+        return s
+    return _Strategy(draw)
+
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+def given(*strategies: _Strategy):
+    def decorate(fn):
+        def wrapper():
+            # settings may sit above OR below given in the decorator stack:
+            # below attaches to fn, above to the wrapper itself
+            conf = getattr(wrapper, "_mini_settings",
+                           getattr(fn, "_mini_settings", {}))
+            n = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for k in range(n):
+                args = [s.example(rnd) for s in strategies]
+                try:
+                    fn(*args)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (run {k}): {args!r}") from e
+        # plain attribute copy, NOT functools.wraps: pytest must see the
+        # zero-arg signature, not the property's argument names (it would
+        # treat them as fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return decorate
+
+
+def settings(**kwargs):
+    def decorate(fn):
+        fn._mini_settings = kwargs
+        return fn
+    return decorate
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, lists=_lists, sets=_sets, from_regex=_from_regex)

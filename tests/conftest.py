@@ -4,3 +4,14 @@ import sys
 # Tests run on the single real CPU device — the 512-device override is
 # strictly dryrun.py's (subprocess tests set their own XLA_FLAGS).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# The container image has no ``hypothesis``; alias in the deterministic
+# mini-implementation so the property tests still run (the real package
+# wins whenever it is importable, e.g. in CI).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+    sys.modules["hypothesis"] = _hypothesis_fallback
+    sys.modules["hypothesis.strategies"] = _hypothesis_fallback.strategies

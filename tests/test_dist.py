@@ -1,0 +1,137 @@
+"""Unit tests for the unified distribution layer (repro.dist.sharding):
+rule resolution, tree_spec round-trips on 1-device host meshes, elastic
+degradation, and per-architecture layouts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import (ShardingRules, REPLICATED, constrain, tree_spec,
+                        arch_rules, adapt_rules_for_mesh, abstract_mesh,
+                        make_host_mesh, use_mesh)
+from repro.dist.sharding import LOGICAL_AXES, tree_shardings
+
+
+def test_replicated_is_all_none():
+    assert all(getattr(REPLICATED, f) is None for f in LOGICAL_AXES)
+
+
+def test_spec_resolves_logical_names():
+    r = ShardingRules(batch=("data",), heads="model")
+    assert r.spec("batch", None, "heads", None) == \
+        P(("data",), None, "model", None)
+    assert r.spec("batch") == P(("data",))
+
+
+def test_spec_deduplicates_mesh_axes_leftmost_wins():
+    r = ShardingRules(kv_heads="model", cache_seq=("data", "model"))
+    spec = r.spec("layers", "batch", "kv_heads", "cache_seq", "head_dim")
+    assert spec == P(None, None, "model", ("data",), None)
+
+
+def test_tree_spec_handles_nesting_scalars_and_none_dims():
+    axes = dict(w=("embed", "heads", "head_dim"), scalar=(),
+                nested=dict(v=(None, "act_embed")))
+    specs = tree_spec(axes, ShardingRules(heads="model", act_embed="data"))
+    assert specs["w"] == P(None, "model", None)
+    assert specs["scalar"] == P()
+    assert specs["nested"]["v"] == P(None, "data")
+
+
+def test_tree_spec_roundtrip_on_host_mesh():
+    """device_put through tree_spec shardings on a 1-device mesh is a
+    value-preserving round-trip."""
+    mesh = make_host_mesh(data=1, model=1)
+    rules = adapt_rules_for_mesh(
+        ShardingRules(batch=("data",), heads="model", mlp="model"), mesh)
+    axes = dict(w=("embed", "mlp"), b=("mlp",), s=())
+    tree = dict(w=jnp.arange(12.0).reshape(3, 4), b=jnp.arange(4.0),
+                s=jnp.float32(7))
+    sh = tree_shardings(axes, rules, mesh)
+    assert all(isinstance(s, NamedSharding) for s in jax.tree.leaves(sh))
+    out = jax.tree.map(jax.device_put, tree, sh)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adapt_drops_model_axes_on_one_device_mesh():
+    mesh = make_host_mesh(data=1, model=1)
+    rules = ShardingRules(batch=("data",), heads="model", kv_heads="model",
+                          mlp="model", expert="model", ssm_heads="model",
+                          cache_seq=("data", "model"))
+    adapted = adapt_rules_for_mesh(rules, mesh)
+    assert adapted == REPLICATED
+    # idempotent
+    assert adapt_rules_for_mesh(adapted, mesh) == adapted
+
+
+def test_adapt_drops_unknown_axes_keeps_live_ones():
+    mesh = abstract_mesh((2, 4), ("data", "model"))
+    rules = ShardingRules(batch=("pod", "data"), heads="model",
+                          expert="ep")  # no "pod"/"ep" axis on this mesh
+    adapted = adapt_rules_for_mesh(rules, mesh)
+    assert adapted.batch == ("data",)
+    assert adapted.heads == "model"
+    assert adapted.expert is None
+
+
+def test_constrain_is_noop_without_mesh_or_rules():
+    x = jnp.ones((2, 3))
+    assert constrain(x, REPLICATED, "batch", None) is x
+    r = ShardingRules(batch=("data",))
+    assert constrain(x, r, "batch", None) is x  # no active mesh
+
+
+def test_constrain_applies_under_active_mesh():
+    mesh = make_host_mesh(data=1, model=1)
+    r = ShardingRules(batch=("data",))
+    with use_mesh(mesh):
+        y = jax.jit(lambda t: constrain(t, r, "batch", None))(jnp.ones((2, 3)))
+    assert isinstance(y.sharding, NamedSharding)
+
+
+def test_arch_rules_distinct_layouts_per_family():
+    mesh = abstract_mesh((4, 4), ("data", "model"))
+    dense = arch_rules(ShardingRules(), mesh, family="dense", num_heads=8,
+                       num_kv_heads=4, d_ff=512, vocab=1024)
+    moe = arch_rules(ShardingRules(), mesh, family="moe", num_heads=8,
+                     num_kv_heads=4, d_ff=256, vocab=1024, num_experts=8)
+    ssm = arch_rules(ShardingRules(), mesh, family="ssm", vocab=1024,
+                     ssm_nheads=8, d_inner=256)
+    assert len({dense, moe, ssm}) == 3
+    # transformer: megatron-style head/ffn split
+    assert dense.heads == "model" and dense.mlp == "model"
+    assert dense.expert is None and dense.ssm_heads is None
+    # moe: model axis on the expert dim, within-expert ffn unsharded
+    assert moe.expert == "model" and moe.mlp is None
+    # mamba2: state-space heads + inner width, state dim unsharded
+    assert ssm.ssm_heads == "model" and ssm.mlp == "model"
+    assert ssm.state is None and ssm.heads is None
+    # all share data parallelism over the data axis
+    assert dense.batch == moe.batch == ssm.batch == ("data",)
+
+
+def test_arch_rules_respects_divisibility_and_base_overrides():
+    mesh = abstract_mesh((2, 4), ("data", "model"))
+    r = arch_rules(ShardingRules(), mesh, family="dense", num_heads=6,
+                   num_kv_heads=2, d_ff=512, vocab=1001)
+    assert r.heads is None        # 6 % 4 != 0
+    assert r.kv_heads is None     # 2 % 4 != 0
+    assert r.mlp == "model"
+    assert r.vocab is None and r.logits_seq == "model"  # vocab fallback
+    base = ShardingRules(mlp="data")  # explicit entries win
+    assert arch_rules(base, mesh, family="dense", d_ff=512).mlp == "data"
+
+
+def test_arch_rules_multi_pod_data_axes():
+    mesh = abstract_mesh((2, 4, 4), ("pod", "data", "model"))
+    r = arch_rules(ShardingRules(), mesh, family="dense", num_heads=8,
+                   num_kv_heads=8, d_ff=512, vocab=1024)
+    assert r.batch == ("pod", "data")
+
+
+def test_arch_rules_on_one_device_mesh_degrades_to_replicated():
+    mesh = make_host_mesh(data=1, model=1)
+    r = arch_rules(ShardingRules(), mesh, family="moe", num_heads=8,
+                   num_kv_heads=8, d_ff=512, vocab=1024, num_experts=8)
+    assert r == REPLICATED

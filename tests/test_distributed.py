@@ -70,9 +70,9 @@ def test_distributed_histogram():
 
 def test_moe_ep_on_real_mesh():
     _run("""
-    from jax.sharding import AxisType
     from repro.models.config import ModelConfig
     from repro.models import moe as M
+    from repro.dist import make_mesh, use_mesh
     from repro.dist.sharding import ShardingRules, REPLICATED
     cfg = ModelConfig(num_layers=1, d_model=32, d_ff=64, vocab_size=50,
                       num_experts=8, experts_per_token=2, dtype="float32",
@@ -80,10 +80,9 @@ def test_moe_ep_on_real_mesh():
     p = M.moe_init(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32), jnp.float32)
     y_dense, _ = M.moe_ffn_dense(x, p, cfg, REPLICATED)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,)*2)
+    mesh = make_mesh((2, 4), ("data", "model"))
     rules = ShardingRules(batch=("data",), expert="model", embed="data")
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         y_ep, drops = jax.jit(
             lambda xx, pp: M.moe_ffn_ep(xx, pp, cfg, rules, mesh))(x, p)
     assert int(drops) == 0
@@ -97,6 +96,7 @@ def test_sharded_train_step_and_elastic_reshard():
     _run("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.models import ModelConfig, get_model
+    from repro.dist import use_mesh
     from repro.dist.sharding import ShardingRules, adapt_rules_for_mesh
     from repro.train import (OptConfig, init_opt_state, make_train_step)
     from repro.train.elastic import state_shardings, reshard_state
@@ -118,7 +118,7 @@ def test_sharded_train_step_and_elastic_reshard():
 
     sh1 = state_shardings(api, mesh1, rules)
     state1 = jax.tree.map(jax.device_put, state, sh1)
-    with mesh1:
+    with use_mesh(mesh1):
         step1 = jax.jit(make_train_step(api, ocfg))
         s_after1, m1 = step1(state1, batch)
 
@@ -134,7 +134,7 @@ def test_sharded_train_step_and_elastic_reshard():
     mesh2 = make_host_mesh(data=4, model=2)
     api2 = get_model(cfg, mesh2, adapt_rules_for_mesh(rules, mesh2))
     state2 = reshard_state(s_after1, api2, mesh2, rules)
-    with mesh2:
+    with use_mesh(mesh2):
         step2 = jax.jit(make_train_step(api2, ocfg))
         s_after2, m2 = step2(state2, batch)
     s_ref2, _ = make_train_step(api0, ocfg)(s_ref, batch)

@@ -27,20 +27,20 @@ def _run(body: str) -> str:
 
 
 CELL_BODY = """
-from jax.sharding import AxisType
+from repro.dist import make_mesh, use_mesh
 from repro.launch.shapes import make_cell, Shape
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((4, 4), ("data", "model"))
 cell = make_cell({arch!r}, {shape!r}, mesh,
                  overrides=dict({overrides}),
                  shape_override=Shape({kind!r}, {seq}, {batch}))
 fn = jax.jit(cell.fn, in_shardings=cell.in_shardings,
              donate_argnums=cell.donate_argnums)
-with mesh:
+with use_mesh(mesh):
     compiled = fn.lower(*cell.args).compile()
 mem = compiled.memory_analysis()
 assert mem.temp_size_in_bytes > 0
-cost = compiled.cost_analysis()
+from repro.dist.compat import cost_analysis
+cost = cost_analysis(compiled)
 assert cost["flops"] > 0
 print("OK", int(mem.temp_size_in_bytes), int(cost["flops"]))
 """
