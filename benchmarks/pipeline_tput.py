@@ -1,6 +1,12 @@
 """Pipeline-stage throughput: the vectorized JAX group-by vs the Pig-style
-Python oracle, dictionary build, and the LM batch pipeline feed rate."""
+Python oracle, dictionary build, the LM batch pipeline feed rate, and the
+full 3-stage log pipeline — single-host vs distributed on a host-local
+8-shard mesh (repartition -> dedup+sessionize -> ngram/funnel rollups)."""
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
 
 import numpy as np
 
@@ -8,6 +14,81 @@ from repro.core import EventDictionary, sessionize
 from repro.core.oracle import sessionize_oracle
 from repro.data import SessionBatchPipeline, PipelineConfig
 from .common import corpus, timeit, row
+
+# The host-local distributed run needs the device-count XLA flag set before
+# jax imports, so it lives in a subprocess. It times the SAME corpus and
+# funnel through both entry points and asserts the rollups agree before
+# reporting.
+_DIST_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, time
+sys.path.insert(0, {src!r})
+import numpy as np, jax
+from repro.core import EventDictionary
+from repro.data import generate, LogGenConfig
+from repro.data.distpipe import (DistPipelineConfig,
+                                 make_distributed_pipeline,
+                                 single_host_pipeline)
+
+log = generate(LogGenConfig(n_users={n_users}, seed={seed}))
+b = log.batch
+d = EventDictionary.build(b.table, b.name_id)
+codes = np.asarray(d.encode_ids(b.name_id))
+stages = [d.codes_matching(p) for p in (
+    "*:signup:landing:form:signup_button:click",
+    "*:signup:form:form:submit_button:submit",
+    "*:signup:follow_suggestions:list:user:follow",
+    "*:signup:complete:page::impression")]
+n = len(b)
+ip = b.ip.astype(np.int64)
+cfg = DistPipelineConfig(alphabet_size=d.alphabet_size,
+                         max_sessions_per_shard=-(-n // 4), max_len=2048)
+
+def timed(fn, repeats=3):
+    out = fn()  # warmup (jit compile); result reused for the equivalence check
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts)), out
+
+us_single, ora = timed(lambda: single_host_pipeline(
+    b.user_id, b.session_id, b.timestamp, codes, ip, cfg=cfg, stages=stages))
+mesh = jax.make_mesh((8,), ("data",))
+pipe = make_distributed_pipeline(mesh, cfg, stages)
+us_dist, res = timed(
+    lambda: pipe(b.user_id, b.session_id, b.timestamp, codes, ip))
+
+assert res.dropped == 0
+assert res.num_sessions() == ora.num_sessions()
+assert np.array_equal(res.ngram_counts, ora.ngram_counts)
+assert res.funnel_reach == ora.funnel_reach
+print(f"DIST,{{n}},{{us_single:.1f}},{{us_dist:.1f}}")
+"""
+
+
+def _distpipe_rows(n_users: int = 2000, seed: int = 42) -> list[str]:
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    script = _DIST_SCRIPT.format(src=src, n_users=n_users, seed=seed)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError("distributed pipeline bench failed:\n"
+                           + out.stderr[-3000:])
+    line = next(l for l in out.stdout.splitlines() if l.startswith("DIST,"))
+    _, n, us_single, us_dist = line.split(",")
+    n, us_single, us_dist = int(n), float(us_single), float(us_dist)
+    return [
+        row("pipeline_single_host", us_single,
+            f"{n / (us_single / 1e6) / 1e6:.2f}M events/s "
+            "dedup+sessionize+ngram+funnel"),
+        row("pipeline_distributed_8shard", us_dist,
+            f"{n / (us_dist / 1e6) / 1e6:.2f}M events/s "
+            "repartition+dedup+sessionize+rollups, 8 host shards"),
+    ]
 
 
 def run() -> list[str]:
@@ -42,4 +123,5 @@ def run() -> list[str]:
         row("dictionary_build", us_dict, f"alphabet from {n} events"),
         row("lm_batch_pipeline_epoch", us_pipe,
             f"{toks / (us_pipe / 1e6) / 1e6:.2f}M tokens/s prefetch=2"),
+        *_distpipe_rows(),
     ]

@@ -12,16 +12,23 @@ artifacts; see EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-import sys
+import argparse
 
 
 def main() -> None:
     from . import compression, query_speed, rollups, ngram_table, \
         pipeline_tput
+    sections = dict(compression=compression, query_speed=query_speed,
+                    rollups=rollups, ngram_table=ngram_table,
+                    pipeline_tput=pipeline_tput)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(sections), nargs="+",
+                    help="run only these sections (default: all)")
+    args = ap.parse_args()
+    picked = args.only or list(sections)
     print("name,us_per_call,derived")
-    for mod in (compression, query_speed, rollups, ngram_table,
-                pipeline_tput):
-        for line in mod.run():
+    for name in picked:
+        for line in sections[name].run():
             print(line, flush=True)
 
 

@@ -3,7 +3,17 @@ abandonment, A/B-style comparison between client populations, and the
 Pallas funnel kernel path.
 
 Run:  PYTHONPATH=src python examples/funnel_analysis.py
+
+``--distributed`` additionally runs the funnel through the distributed
+multi-stage pipeline (repro.data.distpipe) on a host-local mesh over every
+local device and checks it against the single-host reach. Give the host
+more shards with, e.g.:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/funnel_analysis.py --distributed
 """
+import argparse
+
 import numpy as np
 
 from repro.core import EventDictionary, SessionSequences, sessionize
@@ -20,7 +30,7 @@ FUNNEL = ["*:signup:landing:form:signup_button:click",
           "*:signup:complete:page::impression"]
 
 
-def main():
+def main(distributed: bool = False):
     log = generate(LogGenConfig(n_users=1500, signup_fraction=0.25, seed=5))
     b = log.batch
     d = EventDictionary.build(b.table, b.name_id)
@@ -62,6 +72,30 @@ def main():
     assert [c for _, c in r] == [c for _, c in reach]
     print("  matches the jnp reference exactly")
 
+    if distributed:
+        import jax
+        from repro.data.distpipe import (DistPipelineConfig,
+                                         make_distributed_pipeline)
+        n_dev = jax.device_count()
+        print(f"\n=== distributed pipeline on a host-local (1, {n_dev}) "
+              "mesh ===")
+        mesh = jax.make_mesh((n_dev,), ("data",))
+        cfg = DistPipelineConfig(
+            alphabet_size=d.alphabet_size,
+            max_sessions_per_shard=-(-len(b) // max(n_dev, 2) * 2),
+            max_len=2048)
+        pipe = make_distributed_pipeline(mesh, cfg, stages)
+        res = pipe(b.user_id, b.session_id, b.timestamp, codes,
+                   b.ip.astype(np.int64))
+        print(f"  {res.num_sessions()} sessions across {n_dev} shards, "
+              f"dropped={res.dropped}")
+        print("  pipeline reach:", res.funnel_reach)
+        assert [c for _, c in res.funnel_reach] == [c for _, c in reach]
+        print("  matches the single-host funnel exactly")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--distributed", action="store_true",
+                    help="also run the sharded multi-stage pipeline")
+    main(distributed=ap.parse_args().distributed)

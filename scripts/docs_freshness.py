@@ -1,0 +1,67 @@
+"""Docs-freshness gate (run from the repo root with PYTHONPATH=src).
+
+Fails CI when the top-level docs drift from the tree:
+
+* README.md / docs/architecture.md must exist;
+* the test-module count README claims ("spans **N test modules**") must
+  match what ``pytest --collect-only -q`` actually collects;
+* every ``examples/``, ``benchmarks/`` and ``docs/`` path README mentions
+  must exist.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def fail(msg: str) -> None:
+    print(f"docs-freshness: FAIL — {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def collected_test_modules() -> set[str]:
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "--collect-only", "-q"],
+        capture_output=True, text=True, cwd=ROOT)
+    if out.returncode != 0:
+        fail(f"pytest --collect-only failed:\n{out.stdout[-2000:]}")
+    mods = set()
+    for line in out.stdout.splitlines():
+        if "::" in line:
+            mods.add(line.split("::")[0])
+    return mods
+
+
+def main() -> None:
+    readme = ROOT / "README.md"
+    if not readme.exists():
+        fail("README.md is absent")
+    if not (ROOT / "docs" / "architecture.md").exists():
+        fail("docs/architecture.md is absent")
+    text = readme.read_text()
+
+    m = re.search(r"\*\*(\d+) test modules?\*\*", text)
+    if not m:
+        fail("README.md does not claim a test-module count "
+             "('spans **N test modules**')")
+    claimed = int(m.group(1))
+    actual = len(collected_test_modules())
+    if claimed != actual:
+        fail(f"README claims {claimed} test modules, "
+             f"pytest --collect-only finds {actual} — update README.md")
+
+    missing = [p for p in re.findall(
+        r"`((?:examples|benchmarks|docs)/[\w./-]+\.(?:py|md))`", text)
+        if not (ROOT / p).exists()]
+    if missing:
+        fail(f"README references missing paths: {missing}")
+
+    print(f"docs-freshness: OK ({actual} test modules, README claims match)")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,8 +3,8 @@ user models, collocations, dashboard summaries."""
 from .counting import count_events, count_pattern, rollup_counts, \
     make_target_lut, build_rollup_keys
 from .funnel import funnel_reach, funnel_reach_users, funnel_from_patterns, \
-    build_stage_table, abandonment
-from .ngram import NGramLM, ngram_counts, unpack_key
+    build_stage_table, abandonment, reach_histogram
+from .ngram import NGramLM, ngram_counts, unpack_key, dense_ngram_counts
 from .collocations import collocations, top_collocations, Collocation
 from .summary import summarize, SummaryReport, DURATION_BUCKETS
 
@@ -12,7 +12,8 @@ __all__ = [
     "count_events", "count_pattern", "rollup_counts", "make_target_lut",
     "build_rollup_keys", "funnel_reach", "funnel_reach_users",
     "funnel_from_patterns", "build_stage_table", "abandonment",
-    "NGramLM", "ngram_counts", "unpack_key",
+    "reach_histogram",
+    "NGramLM", "ngram_counts", "unpack_key", "dense_ngram_counts",
     "collocations", "top_collocations", "Collocation",
     "summarize", "SummaryReport", "DURATION_BUCKETS",
 ]

@@ -54,6 +54,21 @@ def _deepest_stage(symbols, mask, stage_table, n_stages):
     return k
 
 
+@functools.partial(jax.jit, static_argnames=("n_stages",))
+def reach_histogram(symbols, mask, stage_table, n_stages):
+    """(n_stages,) int32 reach counts — the shard-local half of the
+    distributed funnel rollup.
+
+    ``reach[j]`` = sessions whose deepest stage exceeds j (the paper's
+    per-stage reach table as a fixed-shape vector, mergeable across shards
+    with one ``psum``). Padded session rows have an all-False mask, never
+    advance the automaton, and so count toward no stage.
+    """
+    k = _deepest_stage(symbols, mask, stage_table, n_stages)
+    return jnp.sum((k[:, None] > jnp.arange(n_stages)[None, :])
+                   .astype(jnp.int32), axis=0)
+
+
 def funnel_reach(seqs: SessionSequences, stages, alphabet_size: int,
                  deepest_fn=None) -> list[tuple[int, int]]:
     """The paper's funnel output: [(stage, sessions reaching it), ...].

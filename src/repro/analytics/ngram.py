@@ -51,6 +51,33 @@ def _sorted_unique_counts(keys_flat):
     return ks, is_start, counts[run_id]
 
 
+@functools.partial(jax.jit, static_argnames=("n", "alphabet_size"))
+def dense_ngram_counts(symbols, mask, n, alphabet_size):
+    """Dense (alphabet_size**n,) count vector of order-n grams — the
+    shard-local half of the distributed rollup.
+
+    Unlike ``ngram_counts`` (sparse sort + RLE, host-side), this returns a
+    fixed-shape dense histogram so a mesh of shards can merge with one
+    ``psum`` — the ``make_distributed_histogram`` pattern applied to packed
+    window keys. Intended for the small orders the paper evaluates (n <= 3);
+    the table is materialized, so alphabet_size**n must fit in memory.
+    ``mask`` is the per-position validity mask (rows past a session's stored
+    length, padded session rows, and invalid shard rows are all False).
+    """
+    size = alphabet_size ** n
+    assert size < 2 ** 31, (
+        f"dense n-gram table has {size} cells; packed keys are bucketed as "
+        "int32, so alphabet_size**n must stay below 2**31 — use the sparse "
+        "ngram_counts path for higher orders")
+    if symbols.shape[1] < n:
+        return jnp.zeros(size, jnp.int32)
+    keys = _window_keys(symbols, mask, n, alphabet_size)
+    k = jnp.where(keys < 0, size, keys).reshape(-1)  # invalid -> drop bucket
+    return jax.ops.segment_sum(
+        jnp.ones_like(k, jnp.int32), k.astype(jnp.int32),
+        num_segments=size + 1)[:size]
+
+
 def ngram_counts(seqs: SessionSequences, n: int, alphabet_size: int):
     """(unique_keys int64 (U,), counts int64 (U,)) for all order-n grams."""
     if seqs.max_len < n:

@@ -1,15 +1,21 @@
 """Core unified-logging substrate (the paper's contribution).
 
 Pipeline: raw client events (events.py, namespace.py) -> frequency-ordered
-dictionary (dictionary.py) -> sessionization (sessionize.py /
-distributed.py) -> materialized session sequences (sequences.py, varint.py)
--> catalog (catalog.py). Pure-Python oracles in oracle.py.
+dictionary (dictionary.py) -> sessionization + retry dedup (sessionize.py)
+-> materialized session sequences (sequences.py, varint.py) -> catalog
+(catalog.py). Pure-Python oracles in oracle.py.
+
+Distribution machinery lives in ``repro.dist`` (distributed.py here is only
+a back-compat re-export shim over ``repro.dist.collectives``); the
+mesh-scale multi-stage pipeline over these pieces is
+``repro.data.distpipe``.
 """
 from .namespace import EventName, InvalidEventName, parse, is_valid, match, \
     compile_pattern, LEVELS, ROLLUP_SCHEMAS
 from .events import ClientEvent, EventBatch, EventInitiator, NameTable
 from .dictionary import EventDictionary, histogram, assign_codes
-from .sessionize import sessionize, Sessionized, DEFAULT_GAP_MS, PAD_CODE
+from .sessionize import sessionize, Sessionized, DEFAULT_GAP_MS, PAD_CODE, \
+    mark_duplicate_events
 from .sequences import SessionSequences, code_to_codepoint, codepoint_to_code
 from .catalog import EventCatalog, CatalogEntry
 from . import varint, oracle
@@ -20,6 +26,7 @@ __all__ = [
     "ClientEvent", "EventBatch", "EventInitiator", "NameTable",
     "EventDictionary", "histogram", "assign_codes",
     "sessionize", "Sessionized", "DEFAULT_GAP_MS", "PAD_CODE",
+    "mark_duplicate_events",
     "SessionSequences", "code_to_codepoint", "codepoint_to_code",
     "EventCatalog", "CatalogEntry", "varint", "oracle",
 ]

@@ -56,6 +56,27 @@ def _emit(u, s, rows):
     )
 
 
+def dedup_events_oracle(user_id, session_id, timestamp, code, ip=None,
+                        valid=None) -> np.ndarray:
+    """Reference for ``core.sessionize.mark_duplicate_events``: the validity
+    mask with exact retry duplicates — identical (user, session, timestamp,
+    code, ip) rows after the first — cleared, the "Pig way" (one seen-set)."""
+    n = len(user_id)
+    ip = np.zeros(n, np.int64) if ip is None else np.asarray(ip)
+    valid = np.ones(n, bool) if valid is None else np.asarray(valid)
+    seen: set[tuple] = set()
+    keep = np.zeros(n, bool)
+    for i in range(n):
+        if not valid[i]:
+            continue
+        key = (int(user_id[i]), int(session_id[i]), int(timestamp[i]),
+               int(code[i]), int(ip[i]))
+        if key not in seen:
+            seen.add(key)
+            keep[i] = True
+    return keep
+
+
 def histogram_oracle(name_ids, num_names, valid=None):
     valid = np.ones(len(name_ids), bool) if valid is None else np.asarray(valid)
     out = np.zeros(num_names, np.int64)

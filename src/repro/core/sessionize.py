@@ -66,6 +66,42 @@ class Sessionized:
         )
 
 
+@jax.jit
+def mark_duplicate_events(user_id, session_id, timestamp, code, ip, valid):
+    """Within-user exact-duplicate removal — returns the validity mask with
+    retry duplicates cleared.
+
+    Scribe delivery is at-least-once: client retries and daemon resends
+    materialize as byte-identical event rows (§3.1; the log mover absorbs
+    file-level dupes, row-level ones survive into the warehouse). Two rows
+    are duplicates when all of (user_id, session_id, timestamp, code, ip)
+    match; the first occurrence (original order) survives. Implemented as
+    one stable 5-key ``lax.sort`` + neighbour compare + scatter-back through
+    the carried index column — the same sort-based group-by the sessionizer
+    uses, so it composes with it inside a single shard_map stage.
+    """
+    n = user_id.shape[0]
+    i64max = jnp.asarray(_I64_MAX, jnp.int64)
+    u = jnp.where(valid, user_id, i64max)
+    s = jnp.where(valid, session_id, i64max)
+    t = jnp.where(valid, timestamp, i64max)
+    c = jnp.where(valid, code.astype(jnp.int64), i64max)
+    p = jnp.where(valid, ip.astype(jnp.int64), i64max)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    u, s, t, c, p, idx_s, valid_s = jax.lax.sort(
+        (u, s, t, c, p, idx, valid.astype(jnp.int32)),
+        num_keys=5, is_stable=True)
+    valid_s = valid_s.astype(bool)
+    same = ((u == jnp.roll(u, 1)) & (s == jnp.roll(s, 1))
+            & (t == jnp.roll(t, 1)) & (c == jnp.roll(c, 1))
+            & (p == jnp.roll(p, 1)))
+    # Invalid rows sort last (all-max keys), so a valid row's predecessor is
+    # always valid; first row can never be a duplicate.
+    dup = same & valid_s & (jnp.arange(n) != 0)
+    keep_sorted = valid_s & ~dup
+    return jnp.zeros(n, bool).at[idx_s].set(keep_sorted)
+
+
 @functools.partial(jax.jit, static_argnames=("gap_ms", "max_sessions", "max_len"))
 def _sessionize(user_id, session_id, timestamp, code, ip, valid,
                 *, gap_ms: int, max_sessions: int, max_len: int):
@@ -145,12 +181,15 @@ def _sessionize(user_id, session_id, timestamp, code, ip, valid,
 def sessionize(user_id, session_id, timestamp, code, ip=None, valid=None, *,
                gap_ms: int = DEFAULT_GAP_MS,
                max_sessions: int | None = None,
-               max_len: int | None = None) -> Sessionized:
+               max_len: int | None = None,
+               dedup: bool = False) -> Sessionized:
     """Reconstruct sessions and materialize padded symbol sequences.
 
     Inputs are parallel event columns in *arbitrary order* (the warehouse
     guarantees only partial time order, §2). Static caps default to
     worst-case (every event its own session / one session holding all).
+    ``dedup=True`` drops exact retry duplicates first (the distributed
+    pipeline's stage-2 semantics; see ``mark_duplicate_events``).
     """
     n = len(user_id)
     if max_sessions is None:
@@ -162,10 +201,15 @@ def sessionize(user_id, session_id, timestamp, code, ip=None, valid=None, *,
     if valid is None:
         valid = np.ones(n, bool)
     with enable_x64():
-        out = _sessionize(
-            jnp.asarray(user_id, jnp.int64), jnp.asarray(session_id, jnp.int64),
-            jnp.asarray(timestamp, jnp.int64), jnp.asarray(code, jnp.int32),
-            jnp.asarray(ip, jnp.int64), jnp.asarray(valid, bool),
-            gap_ms=int(gap_ms), max_sessions=int(max_sessions),
-            max_len=int(max_len))
+        u = jnp.asarray(user_id, jnp.int64)
+        s = jnp.asarray(session_id, jnp.int64)
+        t = jnp.asarray(timestamp, jnp.int64)
+        c = jnp.asarray(code, jnp.int32)
+        i = jnp.asarray(ip, jnp.int64)
+        v = jnp.asarray(valid, bool)
+        if dedup:
+            v = mark_duplicate_events(u, s, t, c, i, v)
+        out = _sessionize(u, s, t, c, i, v,
+                          gap_ms=int(gap_ms), max_sessions=int(max_sessions),
+                          max_len=int(max_len))
     return Sessionized(**out)

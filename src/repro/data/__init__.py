@@ -1,5 +1,34 @@
-"""Data substrate: synthetic log generation, simulated Scribe delivery,
-Oink workflow manager, and the LM batch pipeline over session sequences."""
+"""Data substrate: log generation, delivery, workflow management, and the
+two pipelines that consume the warehouse.
+
+Public API by module:
+
+* ``loggen`` — synthetic client-event corpus with the paper's phenomena
+  (Zipf event names, sessions, signup funnels): ``LogGenConfig``,
+  ``GeneratedLog``, ``generate``, ``build_name_table``.
+* ``scribe`` — simulated at-least-once Scribe delivery into the warehouse
+  (§3.1): ``ZooKeeperSim``, ``Aggregator``, ``ScribeDaemon``, ``LogMover``,
+  ``DeliveryError``, ``deliver_batch``, ``read_warehouse_hour``.
+* ``oink`` — the DAG workflow manager over daily jobs (§3.2): ``Oink``,
+  ``Job``, ``JobTrace``, ``DependencyError``.
+* ``pipeline`` — single-host LM-batch consumer of *materialized* session
+  sequences (deterministic, sharded-by-index, prefetched):
+  ``SessionBatchPipeline``, ``PipelineConfig``, ``pack_sessions``,
+  ``encode_tokens``, ``lm_vocab_size``, ``synthetic_batch``, and the
+  special token ids ``PAD_ID``/``BOS_ID``/``EOS_ID``/``UNK_ID``/
+  ``NUM_SPECIALS``.
+* ``distpipe`` — the distributed raw-events -> sessions -> rollups pipeline
+  over ``repro.dist`` (keyed all_to_all repartition, per-shard
+  dedup + sessionize, psum-merged n-gram/funnel rollups):
+  ``DistPipelineConfig``, ``DistPipelineResult``,
+  ``make_distributed_pipeline``, ``DistributedPipeline``,
+  ``single_host_pipeline``, ``SingleHostResult``.
+
+``pipeline`` and ``distpipe`` split at the materialization boundary:
+``distpipe`` turns the hour's raw event columns into session sequences and
+global rollups at mesh scale; ``pipeline`` packs already-materialized
+sequences into LM training batches on each host.
+"""
 from .loggen import LogGenConfig, GeneratedLog, generate, build_name_table
 from .scribe import (ZooKeeperSim, Aggregator, ScribeDaemon, LogMover,
                      DeliveryError, deliver_batch, read_warehouse_hour)
@@ -7,6 +36,9 @@ from .oink import Oink, Job, JobTrace, DependencyError
 from .pipeline import (SessionBatchPipeline, PipelineConfig, pack_sessions,
                        encode_tokens, lm_vocab_size, synthetic_batch,
                        PAD_ID, BOS_ID, EOS_ID, UNK_ID, NUM_SPECIALS)
+from .distpipe import (DistPipelineConfig, DistPipelineResult,
+                       DistributedPipeline, make_distributed_pipeline,
+                       single_host_pipeline, SingleHostResult)
 
 __all__ = [
     "LogGenConfig", "GeneratedLog", "generate", "build_name_table",
@@ -16,4 +48,6 @@ __all__ = [
     "SessionBatchPipeline", "PipelineConfig", "pack_sessions",
     "encode_tokens", "lm_vocab_size", "synthetic_batch",
     "PAD_ID", "BOS_ID", "EOS_ID", "UNK_ID", "NUM_SPECIALS",
+    "DistPipelineConfig", "DistPipelineResult", "DistributedPipeline",
+    "make_distributed_pipeline", "single_host_pipeline", "SingleHostResult",
 ]

@@ -3,18 +3,37 @@ parallelism.
 
 The paper replaces application-specific logging with one "client events"
 layer every downstream job consumes; ``repro.dist`` does the same for
-distribution machinery. Everything that touches a mesh lives here:
+distribution machinery. Everything that touches a mesh lives here.
 
-* ``sharding``    — logical-axis sharding rules (``ShardingRules``,
-  ``constrain``, ``tree_spec``, ``arch_rules``, ``adapt_rules_for_mesh``)
-* ``mesh``        — mesh construction (production pods + host test meshes)
-* ``collectives`` — keyed repartition (all_to_all shuffle), fixed-capacity
-  bucketing, distributed sessionize / histogram
-* ``compat``      — version-portable wrappers over the jax APIs that moved
-  between 0.4.x and 0.7.x (``shard_map``, mesh activation, axis types)
+Public API by module:
 
-``repro.core.distributed`` and ``repro.launch.mesh`` remain as thin
-back-compat re-export shims.
+* ``sharding`` — logical-axis sharding rules: ``ShardingRules`` (named
+  logical dims -> mesh axes), ``REPLICATED``, ``LOGICAL_AXES``,
+  ``constrain`` (with_sharding_constraint by logical name), ``tree_spec``
+  (axes pytree -> PartitionSpec pytree), ``arch_rules`` (per-architecture
+  rule derivation), ``adapt_rules_for_mesh`` (elastic degradation when an
+  axis does not divide).
+* ``mesh`` — mesh construction, functions not module constants (importing
+  never touches device state): ``make_production_mesh`` (256-chip pods,
+  optional multi-pod), ``make_host_mesh`` (small explicit test meshes).
+* ``collectives`` — the reusable dataflow primitives: ``mix64`` /
+  ``shard_of_user`` (avalanched key hashing), ``bucket_by_destination``
+  (fixed-capacity pytree bucketing, shared by MoE dispatch and the log
+  pipeline), ``keyed_all_to_all`` (bucketing + all_to_all as one keyed
+  repartition stage), ``make_distributed_sessionize`` and
+  ``make_distributed_histogram`` (standalone shuffle/psum jobs). The
+  multi-stage log pipeline composing these lives in
+  ``repro.data.distpipe``.
+* ``compat`` — version-portable wrappers over the jax APIs that moved
+  between 0.4.x and 0.7.x: ``shard_map`` (check_rep/check_vma under one
+  kwarg), ``use_mesh`` (set_mesh / sharding.use_mesh / Mesh ctx),
+  ``make_mesh`` (axis_types when supported), ``abstract_mesh``,
+  ``active_mesh``, ``cost_analysis``.
+
+Back-compat shims (kept so pre-PR-1 callers keep working; new code imports
+from ``repro.dist``): ``repro.core.distributed`` re-exports the collectives
+with the old private names and 2-tuple ``_bucket_by_destination`` contract;
+``repro.launch.mesh`` re-exports the mesh builders.
 """
 from .compat import shard_map, use_mesh, make_mesh, abstract_mesh, \
     active_mesh

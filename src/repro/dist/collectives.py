@@ -51,14 +51,17 @@ def shard_of_user(user_id: jax.Array, n_shards: int) -> jax.Array:
     return (mix64(user_id) % jnp.uint64(n_shards)).astype(jnp.int32)
 
 
-def bucket_by_destination(cols: dict[str, jax.Array], dest: jax.Array,
-                          n_dest: int, capacity: int):
+def bucket_by_destination(cols, dest: jax.Array, n_dest: int, capacity: int):
     """Scatter rows into (n_dest, capacity) buckets.
 
-    Rows are stably sorted by destination, positions within a destination
-    are contiguous ranks; rows ranked beyond capacity are dropped (counted,
-    never silent). Payload columns may carry trailing dims — buckets get
-    shape (n_dest, capacity, *payload).
+    ``cols`` is any pytree of arrays sharing leading dim ``len(dest)`` — a
+    flat column dict (the sessionizer), activations with trailing dims (the
+    MoE dispatch routes (T, D) rows through here), or nested rollup payload
+    trees (the distributed pipeline ships column dicts plus per-row rollup
+    structs in one call). Rows are stably sorted by destination, positions
+    within a destination are contiguous ranks; rows ranked beyond capacity
+    are dropped (counted, never silent). Buckets get shape
+    (n_dest, capacity, *payload).
 
     Returns ``(buckets, order, dest_sorted, pos, dropped)``; callers that
     only repartition use ``(buckets, dropped)``, the MoE combine path also
@@ -71,28 +74,32 @@ def bucket_by_destination(cols: dict[str, jax.Array], dest: jax.Array,
     start = jax.ops.segment_min(idx, d_sorted, num_segments=n_dest)
     pos = idx - start[d_sorted]
     dropped = jnp.sum((pos >= capacity).astype(jnp.int32))
-    out = {}
-    for name, v in cols.items():
+
+    def scatter(v):
         v_sorted = v[order]
         buf = jnp.zeros((n_dest, capacity) + v.shape[1:], v.dtype)
-        out[name] = buf.at[d_sorted, pos].set(v_sorted, mode="drop")
+        return buf.at[d_sorted, pos].set(v_sorted, mode="drop")
+
+    out = jax.tree.map(scatter, cols)
     return out, order, d_sorted, pos, dropped
 
 
-def keyed_all_to_all(cols: dict[str, jax.Array], dest: jax.Array,
-                     axis: str, n_shards: int, capacity: int):
+def keyed_all_to_all(cols, dest: jax.Array, axis: str, n_shards: int,
+                     capacity: int):
     """Keyed repartition over mesh axis ``axis`` (call inside shard_map).
 
     Buckets local rows by destination shard and performs the all_to_all
-    shuffle; returns flat received columns of length ``n_shards * capacity``
-    (zero-padded — receivers must mask on a validity column) plus the local
-    dropped-row count.
+    shuffle; ``cols`` is any pytree of same-leading-dim arrays (see
+    ``bucket_by_destination``). Returns the received pytree with flat
+    leading dim ``n_shards * capacity`` (zero-padded — receivers must mask
+    on a validity column) plus the local dropped-row count.
     """
     buckets, _, _, _, dropped = bucket_by_destination(
         cols, dest, n_shards, capacity)
-    recv = {k: jax.lax.all_to_all(v, axis, split_axis=0, concat_axis=0)
-            for k, v in buckets.items()}
-    flat = {k: v.reshape((-1,) + v.shape[2:]) for k, v in recv.items()}
+    recv = jax.tree.map(
+        lambda v: jax.lax.all_to_all(v, axis, split_axis=0, concat_axis=0),
+        buckets)
+    flat = jax.tree.map(lambda v: v.reshape((-1,) + v.shape[2:]), recv)
     return flat, dropped
 
 

@@ -20,9 +20,14 @@ Two modes per cell:
 Results are cached as JSON per (arch, shape, mesh, mode) under
 ``results/dryrun/``; the sweep driver runs each cell in a subprocess.
 
+Besides the model cells there are pipeline cells: the distributed log
+pipeline (data/distpipe.py) lowered at hour-of-events shapes on the
+production mesh, for all_to_all/psum collective sizing.
+
 Usage:
   python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
       --mesh single --mode full
+  python -m repro.launch.dryrun --pipeline hour_1m --mesh single
   python -m repro.launch.dryrun --all            # full sweep (both meshes)
 """
 import argparse
@@ -45,7 +50,7 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                 "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
 
 _COLL_RE = re.compile(
-    r"=\s*(?:\([^)]*\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?\(")
 _TUPLE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
@@ -76,15 +81,12 @@ def collective_bytes(hlo_text: str) -> dict:
         m = _COLL_RE.search(line)
         if not m:
             continue
-        kind = m.group(3)
-        if m.group(1):  # plain shape
-            nbytes = _shape_bytes(m.group(1), m.group(2))
-        else:           # tuple shape: sum components on this line up to '='
-            head = line.split("=")[0] + "=" + line.split("=")[1].split("(")[0]
+        kind = m.group(4)
+        if m.group(2):  # plain shape
+            nbytes = _shape_bytes(m.group(2), m.group(3))
+        else:           # tuple shape: sum the component shapes
             nbytes = sum(_shape_bytes(d, s)
-                         for d, s in _TUPLE_RE.findall(head))
-            if kind == "all-reduce":  # tuple AR counts each operand once
-                nbytes //= 2 if False else 1
+                         for d, s in _TUPLE_RE.findall(m.group(1)))
         mult = 2 if kind == "all-reduce" else 1
         out[kind] += mult * nbytes
         counts[kind] += 1
@@ -142,6 +144,87 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
     return result
 
 
+PIPELINE_SHAPES = {
+    "hour_256k": 1 << 18,
+    "hour_1m": 1 << 20,
+    "hour_16m": 1 << 24,
+}
+
+
+def make_pipeline_cell(n_events: int, mesh, *, alphabet: int = 1024,
+                       max_len: int = 256, n_stages: int = 4,
+                       capacity_factor: float = 2.0):
+    """(fn, args, in_shardings) for the distributed log pipeline.
+
+    Event columns are ShapeDtypeStructs sharded over the mesh ``data`` axis
+    (the log mover's arbitrary partitioning); the funnel stage table is
+    replicated. Lowering must run under ``jax.experimental.enable_x64`` —
+    the columns are int64.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from ..data.distpipe import DistPipelineConfig, build_pipeline_fn
+
+    n_shards = mesh.shape["data"]
+    cfg = DistPipelineConfig(
+        alphabet_size=alphabet,
+        max_sessions_per_shard=-(-n_events // n_shards),
+        max_len=max_len, capacity_factor=capacity_factor)
+    fn = build_pipeline_fn(mesh, cfg, n_stages)
+    sds = jax.ShapeDtypeStruct
+    args = (sds((n_events,), np.int64), sds((n_events,), np.int64),
+            sds((n_events,), np.int64), sds((n_events,), np.int32),
+            sds((n_events,), np.int64), sds((n_events,), bool),
+            sds((n_stages, alphabet), bool))
+    col = NamedSharding(mesh, P("data"))
+    rep = NamedSharding(mesh, P())
+    return fn, args, (col,) * 6 + (rep,)
+
+
+def run_pipeline_cell(shape_name: str, mesh_kind: str,
+                      overrides: dict | None = None, tag: str = "") -> dict:
+    """Lower + compile the distributed log pipeline on the production mesh
+    and extract the same memory/cost/collective-bytes roofline inputs as the
+    model cells. The pipeline has no while loops, so collective bytes from
+    the optimized HLO are exact (the keyed all_to_all dominates)."""
+    from jax.experimental import enable_x64
+    from ..dist.compat import cost_analysis, use_mesh
+    from ..dist.mesh import make_production_mesh
+
+    overrides = dict(overrides or {})
+    data = overrides.pop("mesh_data", 16)
+    model = overrides.pop("mesh_model", 256 // data)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"),
+                                data=data, model=model)
+    n_events = PIPELINE_SHAPES[shape_name]
+    t0 = time.time()
+    fn, args, in_sh = make_pipeline_cell(n_events, mesh, **overrides)
+    jitted = jax.jit(fn, in_shardings=in_sh)
+    with enable_x64():
+        with use_mesh(mesh):
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = cost_analysis(compiled)
+    return dict(
+        arch="pipeline", shape=shape_name, mesh=mesh_kind, mode="cost",
+        tag=tag, skipped=False, n_events=n_events,
+        overrides=overrides or {},
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+        ),
+        flops=cost.get("flops"),
+        bytes_accessed=cost.get("bytes accessed"),
+        utilization=cost.get("utilization", None),
+        collectives=collective_bytes(compiled.as_text()),
+    )
+
+
 def result_path(arch, shape, mesh, mode, tag=""):
     name = f"{arch}__{shape}__{mesh}__{mode}{('__' + tag) if tag else ''}.json"
     return os.path.join(RESULTS_DIR, name)
@@ -155,11 +238,37 @@ def main():
     ap.add_argument("--mode", default="full", choices=["full", "cost"])
     ap.add_argument("--overrides", default="{}")
     ap.add_argument("--tag", default="")
+    ap.add_argument("--pipeline", choices=sorted(PIPELINE_SHAPES),
+                    help="lower+compile the distributed log pipeline at this "
+                         "shape instead of a model cell")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
+
+    if args.pipeline:
+        if args.arch or args.shape or args.mode != "full" or args.all:
+            ap.error("--pipeline is its own cell kind; it cannot be combined "
+                     "with --arch/--shape/--mode/--all (collective bytes are "
+                     "always extracted, i.e. cost mode)")
+        try:
+            res = run_pipeline_cell(args.pipeline, args.mesh,
+                                    json.loads(args.overrides), args.tag)
+        except Exception:
+            res = dict(arch="pipeline", shape=args.pipeline, mesh=args.mesh,
+                       mode="cost", tag=args.tag, error=True,
+                       traceback=traceback.format_exc())
+        path = result_path("pipeline", args.pipeline, args.mesh, "cost",
+                           args.tag)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=2)
+        if res.get("error"):
+            print(res["traceback"], file=sys.stderr)
+            sys.exit(1)
+        print(json.dumps({k: v for k, v in res.items()
+                          if k != "overrides"}, indent=2))
+        return
 
     if args.all:
         from ..configs import ASSIGNED
