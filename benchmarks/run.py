@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   rollups         — §3.2 Oink five-schema aggregations
   ngram_table     — §5.4 temporal-signal table + collocations
   pipeline_tput   — substrate throughput (vectorized vs Pig-style oracle)
+  serve_tput      — serving tokens/sec + p50/p99 request latency
+                    (fixed single-batch vs continuous batching)
 
 Roofline derivation lives in benchmarks/roofline.py (reads the dry-run
 artifacts; see EXPERIMENTS.md).
@@ -17,10 +19,10 @@ import argparse
 
 def main() -> None:
     from . import compression, query_speed, rollups, ngram_table, \
-        pipeline_tput
+        pipeline_tput, serve_tput
     sections = dict(compression=compression, query_speed=query_speed,
                     rollups=rollups, ngram_table=ngram_table,
-                    pipeline_tput=pipeline_tput)
+                    pipeline_tput=pipeline_tput, serve_tput=serve_tput)
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(sections), nargs="+",
                     help="run only these sections (default: all)")

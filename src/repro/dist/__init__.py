@@ -10,9 +10,11 @@ Public API by module:
 * ``sharding`` — logical-axis sharding rules: ``ShardingRules`` (named
   logical dims -> mesh axes), ``REPLICATED``, ``LOGICAL_AXES``,
   ``constrain`` (with_sharding_constraint by logical name), ``tree_spec``
-  (axes pytree -> PartitionSpec pytree), ``arch_rules`` (per-architecture
-  rule derivation), ``adapt_rules_for_mesh`` (elastic degradation when an
-  axis does not divide).
+  (axes pytree -> PartitionSpec pytree), ``tree_shardings`` (same but
+  device-placeable ``NamedSharding``s — how the serving scheduler places
+  params and the KV-cache slab), ``arch_rules`` (per-architecture rule
+  derivation), ``adapt_rules_for_mesh`` (elastic degradation when an axis
+  does not divide).
 * ``mesh`` — mesh construction, functions not module constants (importing
   never touches device state): ``make_production_mesh`` (256-chip pods,
   optional multi-pod), ``make_host_mesh`` (small explicit test meshes).
@@ -38,7 +40,8 @@ with the old private names and 2-tuple ``_bucket_by_destination`` contract;
 from .compat import shard_map, use_mesh, make_mesh, abstract_mesh, \
     active_mesh
 from .sharding import (ShardingRules, REPLICATED, LOGICAL_AXES, constrain,
-                       tree_spec, arch_rules, adapt_rules_for_mesh)
+                       tree_spec, tree_shardings, arch_rules,
+                       adapt_rules_for_mesh)
 from .mesh import make_production_mesh, make_host_mesh
 from .collectives import (mix64, shard_of_user, bucket_by_destination,
                           keyed_all_to_all, make_distributed_sessionize,
@@ -47,7 +50,7 @@ from .collectives import (mix64, shard_of_user, bucket_by_destination,
 __all__ = [
     "shard_map", "use_mesh", "make_mesh", "abstract_mesh", "active_mesh",
     "ShardingRules", "REPLICATED", "LOGICAL_AXES", "constrain",
-    "tree_spec", "arch_rules", "adapt_rules_for_mesh",
+    "tree_spec", "tree_shardings", "arch_rules", "adapt_rules_for_mesh",
     "make_production_mesh", "make_host_mesh",
     "mix64", "shard_of_user", "bucket_by_destination", "keyed_all_to_all",
     "make_distributed_sessionize", "make_distributed_histogram",

@@ -53,10 +53,19 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
     ``impl="ref"`` accepts traced kv_len/q_offset (the decode path);
     the Pallas impls require them static (training/prefill shapes).
+    Per-row (B,)-shaped kv_len/q_offset — the continuous-batching decode
+    path, Lq == 1 — always routes to the oracle: single-row scores are
+    cheap and the Pallas kernel's masking is scalar-only.
     ``unroll`` unrolls the blocked impl's k-scan (cost-mode compiles).
     """
     if scale is None:
         scale = q.shape[-1] ** -0.5
+    per_row = (kv_len is not None and jnp.ndim(kv_len) >= 1) or \
+        jnp.ndim(q_offset) >= 1
+    if per_row:
+        assert q.shape[2] == 1, "per-row kv_len/q_offset is decode-only"
+        return attention_ref(q, k, v, causal=causal, scale=scale,
+                             kv_len=kv_len, q_offset=q_offset)
     if impl == "ref":
         return attention_ref(q, k, v, causal=causal, scale=scale,
                              kv_len=kv_len, q_offset=q_offset)

@@ -12,14 +12,20 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def _is_per_row(x) -> bool:
+    return x is not None and jnp.ndim(x) >= 1
+
+
 def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None,
-                  kv_len: int | None = None, q_offset: int = 0):
+                  kv_len=None, q_offset=0):
     """GQA attention oracle.
 
     q: (B, H, Lq, D); k, v: (B, KVH, Lk, D) with H % KVH == 0.
     ``kv_len`` masks padded key positions; ``q_offset`` is the absolute
     position of q[0] (decode: q_offset = cache length so causal masking is
-    correct for a single new token).
+    correct for a single new token). Both accept a scalar or a per-row
+    (B,) array — the per-row form is the continuous-batching decode path,
+    where every batch row sits at a different absolute position.
     """
     b, h, lq, d = q.shape
     _, kvh, lk, _ = k.shape
@@ -36,31 +42,45 @@ def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None,
     # * lq == 1 (decode): grouped einsum. Scores are tiny but the CACHE is
     #   huge; repeating it g-fold materializes/reshards gigabytes.
     kpos = jnp.arange(lk)
-    mask = jnp.zeros((lq, lk), bool)
-    if causal:
-        qpos = q_offset + jnp.arange(lq)
-        mask = mask | (kpos[None, :] > qpos[:, None])
-    if kv_len is not None:
-        mask = mask | (kpos[None, :] >= kv_len)
+    per_row = _is_per_row(kv_len) or _is_per_row(q_offset)
+    if per_row:
+        # mask: (B, Lq, Lk) — each row masks by its own length/offset
+        off = jnp.reshape(jnp.asarray(q_offset), (-1, 1))   # (B|1, 1)
+        qpos = off + jnp.arange(lq)[None, :]                # (B|1, Lq)
+        mask = jnp.zeros((b, lq, lk), bool)
+        if causal:
+            mask = mask | (kpos[None, None, :] > qpos[:, :, None])
+        if kv_len is not None:
+            kvl = jnp.reshape(jnp.asarray(kv_len), (-1, 1, 1))
+            mask = mask | (kpos[None, None, :] >= kvl)
+    else:
+        mask = jnp.zeros((lq, lk), bool)
+        if causal:
+            qpos = q_offset + jnp.arange(lq)
+            mask = mask | (kpos[None, :] > qpos[:, None])
+        if kv_len is not None:
+            mask = mask | (kpos[None, :] >= kv_len)
 
     if lq == 1 and g > 1:
+        mg = mask[:, None, None] if per_row else mask[None, None, None]
         qf = q.astype(jnp.float32).reshape(b, kvh, g, lq, d)
         kf = k.astype(jnp.float32)
         vf = v.astype(jnp.float32)
         s = jnp.einsum("bkgqd,bkld->bkgql", qf, kf) * scale
-        s = jnp.where(mask[None, None, None], NEG_INF, s)
+        s = jnp.where(mg, NEG_INF, s)
         p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
         p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
         o = jnp.einsum("bkgql,bkld->bkgqd", p, vf)
         return o.reshape(b, h, lq, d).astype(q.dtype)
 
+    mr = mask[:, None] if per_row else mask[None, None]
     qf = q.astype(jnp.float32)
     kf = jnp.repeat(k.astype(jnp.float32), g, axis=1) if g > 1 \
         else k.astype(jnp.float32)
     vf = jnp.repeat(v.astype(jnp.float32), g, axis=1) if g > 1 \
         else v.astype(jnp.float32)
     s = jnp.einsum("bhqd,bhld->bhql", qf, kf) * scale
-    s = jnp.where(mask[None, None], NEG_INF, s)
+    s = jnp.where(mr, NEG_INF, s)
     p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
     p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
     return jnp.einsum("bhql,bhld->bhqd", p, vf).astype(q.dtype)

@@ -1,13 +1,32 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Restores the newest checkpoint (if any) and serves batched next-event
-predictions over session prefixes drawn from the live pipeline.
+predictions over session prefixes drawn from the live pipeline. With
+``--continuous`` the prefixes are served as an open-ended request stream
+(variable prompt lengths, > 3x the slot count) through the
+continuous-batching scheduler, and the latency/throughput summary is
+printed afterwards.
 """
 from __future__ import annotations
 
 import argparse
 
 import numpy as np
+
+
+def _decode_names(tokens, d, num_specials: int):
+    """Token ids -> event names. vocab may be padded past the dictionary
+    alphabet (``max(vocab, 16)``), so clamp instead of raising."""
+    names = []
+    for t in tokens:
+        t = int(t)
+        if t < num_specials:
+            names.append("<s>")
+        elif t - num_specials < d.alphabet_size:
+            names.append(d.name_of(t - num_specials))
+        else:
+            names.append("<unk>")
+    return names
 
 
 def main():
@@ -18,6 +37,11 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a request stream through the "
+                         "continuous-batching scheduler")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="stream size for --continuous (default 3x batch)")
     args = ap.parse_args()
 
     import jax
@@ -27,7 +51,8 @@ def main():
                         PipelineConfig, lm_vocab_size, NUM_SPECIALS)
     from ..models import get_model
     from ..train import CheckpointManager, OptConfig, init_opt_state
-    from ..serve import Server, ServeConfig
+    from ..serve import (Server, ServeConfig, ContinuousScheduler,
+                         SchedulerConfig, ServeMetrics, prompt_lengths)
 
     log = generate(LogGenConfig(n_users=400, seed=0))
     b = log.batch
@@ -54,13 +79,46 @@ def main():
 
     pipe = SessionBatchPipeline(seqs, PipelineConfig(
         seq_len=64, global_batch=max(args.batch, 1)))
+
+    if args.continuous and cfg.family in \
+            ContinuousScheduler.SUPPORTED_FAMILIES:
+        n_req = args.requests or 3 * args.batch
+        metrics = ServeMetrics()
+        sched = ContinuousScheduler(api, params, SchedulerConfig(
+            batch=args.batch, buckets=(16, 32, 64),
+            max_new_tokens=args.max_new_tokens,
+            temperature=args.temperature), metrics=metrics)
+        rng = np.random.default_rng(0)
+        rids = []
+        for i in range(n_req):
+            row = pipe.batch_at(0, i % max(args.batch, 1))["tokens"]
+            row = np.asarray(row[i % row.shape[0]])
+            n = int(rng.integers(4, 33))        # variable prompt lengths
+            n = min(n, int(prompt_lengths(row[None])[0]))  # stay on real toks
+            rids.append(sched.submit(row[:n]))
+        outs = sched.run()
+        for rid in rids[: args.batch]:
+            names = _decode_names(outs[rid], d, NUM_SPECIALS)
+            print(f"request {rid}: "
+                  + " -> ".join(n.split(":")[-1] for n in names))
+        summ = metrics.summary()
+        print("served {requests} requests, {tokens} tokens, "
+              "{tokens_per_sec:.1f} tok/s, p50 latency {p50_latency_s:.3f}s,"
+              " p99 {p99_latency_s:.3f}s".format(**summ))
+        print(f"jit traces: {dict(sched.trace_counts)} "
+              f"(prefills={sched.prefills}, decode_steps="
+              f"{sched.decode_steps})")
+        return
+
+    if args.continuous:
+        print(f"family {cfg.family!r} is not continuous-batchable; "
+              "falling back to the fixed-batch server")
     prompts = pipe.batch_at(0, 0)["tokens"][: args.batch, :32]
     srv = Server(api, params, ServeConfig(
         max_new_tokens=args.max_new_tokens, temperature=args.temperature))
     gen = srv.generate(prompts)
     for i in range(args.batch):
-        names = [d.name_of(t - NUM_SPECIALS) if t >= NUM_SPECIALS else "<s>"
-                 for t in gen[i]]
+        names = _decode_names(gen[i], d, NUM_SPECIALS)
         print(f"request {i}: " + " -> ".join(n.split(":")[-1]
                                              for n in names))
 

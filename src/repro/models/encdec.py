@@ -141,10 +141,11 @@ def decode_stack(params, tokens, enc_out, cfg: ModelConfig,
                  cross_kv=None):
     b, s = tokens.shape
     base = 0 if cache_index is None else cache_index
-    pos = base + jnp.arange(s, dtype=jnp.int32)
+    pos = L.decode_positions(base, s)          # (s,) or per-row (B, s)
     x = L.apply_embed(tokens, params["embed"], cfg, rules)
-    x = x + jnp.take(params["pos_dec"].astype(x.dtype),
-                     jnp.minimum(pos, cfg.max_target_len - 1), axis=0)[None]
+    pe = jnp.take(params["pos_dec"].astype(x.dtype),
+                  jnp.minimum(pos, cfg.max_target_len - 1), axis=0)
+    x = x + (pe if pos.ndim == 2 else pe[None])
 
     if cache is None:
         def body(carry, bp):
@@ -183,7 +184,7 @@ def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules, mesh=None):
 
 
 def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
-            frames, max_cache_len: int, mesh=None):
+            frames, max_cache_len: int, mesh=None, lengths=None):
     b, s = tokens.shape
     enc_out = encode(params, frames, cfg, rules)
     cross_kv = precompute_cross_kv(params, enc_out, cfg, rules)
@@ -191,13 +192,19 @@ def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
     hidden, cache = decode_stack(params, tokens, enc_out, cfg, rules,
                                  cache=cache, cache_index=0,
                                  cross_kv=cross_kv)
-    logits = L.apply_unembed(hidden[:, -1:], params["embed"], cfg, rules)
     state = dict(kv=cache, cross_kv=cross_kv)
-    return logits[:, 0], state, s
+    if lengths is None:
+        logits = L.apply_unembed(hidden[:, -1:], params["embed"], cfg, rules)
+        return logits[:, 0], state, s
+    li = jnp.asarray(lengths, jnp.int32)
+    last = hidden[jnp.arange(b), li - 1]
+    logits = L.apply_unembed(last[:, None], params["embed"], cfg, rules)
+    return logits[:, 0], state, li
 
 
 def decode_step(params, token, state, index, cfg: ModelConfig,
                 rules: ShardingRules, mesh=None):
+    """``index``: scalar or per-row (B,) decoder positions."""
     hidden, cache = decode_stack(params, token[:, None], None, cfg, rules,
                                  cache=state["kv"], cache_index=index,
                                  cross_kv=state["cross_kv"])

@@ -120,7 +120,7 @@ def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
     x = L.apply_embed(tokens, params["embed"], cfg, rules)
     s = tokens.shape[1]
     base = 0 if cache_index is None else cache_index
-    positions = base + jnp.arange(s, dtype=jnp.int32)
+    positions = L.decode_positions(base, s)
 
     def slice_layers(tree, lo, hi):
         return jax.tree.map(lambda t: t[lo:hi], tree)
@@ -187,7 +187,12 @@ def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules, mesh=None):
 
 
 def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
-            max_cache_len: int, mesh=None):
+            max_cache_len: int, mesh=None, lengths=None):
+    if lengths is not None:
+        raise ValueError(
+            "hybrid prefill cannot honor per-row lengths: the Mamba "
+            "recurrent state advances on pad tokens; serve exact-length "
+            "prompts (bucket contract) for SSM families")
     b, s = tokens.shape
     state = init_state(cfg, b, max_cache_len)
     hidden, state = forward(params, tokens, cfg, rules, state=state,
@@ -197,6 +202,8 @@ def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
 
 def decode_step(params, token, state, index, cfg: ModelConfig,
                 rules: ShardingRules, mesh=None):
+    """``index``: scalar or per-row (B,) positions (the Mamba state is
+    position-free; only the shared attention block consumes it)."""
     hidden, state = forward(params, token[:, None], cfg, rules, state=state,
                             cache_index=index, mesh=mesh)
     return _logits(params, hidden, cfg, rules)[:, 0], state

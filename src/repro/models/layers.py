@@ -155,6 +155,20 @@ def kv_cache_axes():
                 v=("layers", "batch", "kv_heads", "cache_seq", "head_dim"))
 
 
+def decode_positions(index, s: int):
+    """Absolute positions for ``s`` tokens starting at ``index``.
+
+    ``index`` scalar -> (s,) shared positions (the single-stream path);
+    ``index`` (B,)   -> (B, s) per-row positions (continuous batching,
+    where every slot sits at a different depth).
+    """
+    idx = jnp.asarray(index, jnp.int32)
+    ar = jnp.arange(s, dtype=jnp.int32)
+    if idx.ndim == 0:
+        return idx + ar
+    return idx[:, None] + ar[None, :]
+
+
 def project_kv(src, p, cfg: ModelConfig, rules: ShardingRules):
     """Precompute (kh, vh) in (B, KVH, S, Dh) layout — cross-attention K/V
     never change during decode, so serving computes them once."""
@@ -181,6 +195,10 @@ def apply_attention(x, p, cfg: ModelConfig, rules: ShardingRules, *,
     causal). kv_precomputed: (kh, vh) from project_kv (skips projections).
     cache: dict(k, v) of (B, KVH, Lmax, Dh) for *this layer* plus
     cache_index = current length; returns (out, updated_cache).
+    ``cache_index`` may be a scalar (all rows at the same depth) or a (B,)
+    array of per-row lengths — the continuous-batching decode path, where
+    each slot writes its new K/V at its own position and masks keys past
+    its own length (S must be 1 in that case).
     """
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -221,11 +239,21 @@ def apply_attention(x, p, cfg: ModelConfig, rules: ShardingRules, *,
     q_offset = 0
     new_cache = None
     if cache is not None:
-        # decode/prefill-into-cache: write new keys at cache_index
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], kh, cache_index, axis=2)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], vh, cache_index, axis=2)
+        if jnp.ndim(cache_index) >= 1:
+            # per-row decode: each row writes its single new K/V at its own
+            # cache position (scatter; out-of-bounds rows are dropped) and
+            # attends only keys below its own length.
+            assert s == 1, "per-row cache_index is single-token decode only"
+            rows = jnp.arange(b)
+            idx = jnp.asarray(cache_index, jnp.int32)
+            ck = cache["k"].at[rows, :, idx].set(kh[:, :, 0])
+            cv = cache["v"].at[rows, :, idx].set(vh[:, :, 0])
+        else:
+            # all rows at the same depth: contiguous dynamic-slice write
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kh, cache_index, axis=2)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vh, cache_index, axis=2)
         new_cache = dict(k=ck, v=cv)
         kh, vh = ck, cv
         kv_len = cache_index + s

@@ -326,9 +326,14 @@ def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules):
 
 
 def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
-            max_cache_len: int = 0):
+            max_cache_len: int = 0, lengths=None):
     """Run the prompt, returning (last_logits, state, next_index). SSM state
     is O(1); max_cache_len is ignored (kept for API parity)."""
+    if lengths is not None:
+        raise ValueError(
+            "ssm prefill cannot honor per-row lengths: the recurrent state "
+            "advances on pad tokens; serve exact-length prompts (bucket "
+            "contract) for SSM families")
     b, s = tokens.shape
     state = init_mamba_state(cfg, b)
     hidden, state = forward(params, tokens, cfg, rules, state=state)

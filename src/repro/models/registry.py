@@ -6,6 +6,17 @@
   prefill(params, batch) -> (logits, state, index)
   decode_step(params, token, state, index) -> (logits, state)
   batch_keys: which inputs the family consumes (tokens/frames/patches...)
+
+Serving contract (the continuous-batching decode path):
+  * ``prefill`` honours an optional ``batch["lengths"]`` (B,) for ragged,
+    left-aligned right-PAD-padded prompts on attention-cache families
+    (dense/moe/encdec/vlm): logits are read at each row's last real token
+    and ``index`` comes back per-row. SSM-state families (ssm/hybrid)
+    raise — their recurrent state advances on pad tokens.
+  * ``decode_step``'s ``index`` is a scalar (all rows at the same depth)
+    or a per-row (B,) array of absolute positions; the per-row form writes
+    each row's K/V at its own cache slot and masks keys past its own
+    length.
 """
 from __future__ import annotations
 
@@ -49,7 +60,8 @@ def get_model(cfg: ModelConfig, mesh=None,
             loss=lambda p, b: transformer.loss_fn(p, b, cfg, rules, mesh),
             prefill=lambda p, b: transformer.prefill(
                 p, b["tokens"], cfg, rules,
-                max_cache_len=cfg.max_cache_len, mesh=mesh),
+                max_cache_len=cfg.max_cache_len, mesh=mesh,
+                lengths=b.get("lengths")),
             decode_step=lambda p, tok, st, i: transformer.decode_step(
                 p, tok, st, i, cfg, rules, mesh),
             batch_keys=("tokens", "targets", "loss_mask"),
@@ -60,7 +72,8 @@ def get_model(cfg: ModelConfig, mesh=None,
             init=lambda key: mamba2.init_params(key, cfg),
             axes=lambda: mamba2.param_axes(cfg),
             loss=lambda p, b: mamba2.loss_fn(p, b, cfg, rules),
-            prefill=lambda p, b: mamba2.prefill(p, b["tokens"], cfg, rules),
+            prefill=lambda p, b: mamba2.prefill(
+                p, b["tokens"], cfg, rules, lengths=b.get("lengths")),
             decode_step=lambda p, tok, st, i: mamba2.decode_step(
                 p, tok, st, i, cfg, rules),
             batch_keys=("tokens", "targets", "loss_mask"),
@@ -73,7 +86,8 @@ def get_model(cfg: ModelConfig, mesh=None,
             loss=lambda p, b: hybrid.loss_fn(p, b, cfg, rules, mesh),
             prefill=lambda p, b: hybrid.prefill(
                 p, b["tokens"], cfg, rules,
-                max_cache_len=cfg.max_cache_len, mesh=mesh),
+                max_cache_len=cfg.max_cache_len, mesh=mesh,
+                lengths=b.get("lengths")),
             decode_step=lambda p, tok, st, i: hybrid.decode_step(
                 p, tok, st, i, cfg, rules, mesh),
             batch_keys=("tokens", "targets", "loss_mask"),
@@ -86,7 +100,8 @@ def get_model(cfg: ModelConfig, mesh=None,
             loss=lambda p, b: encdec.loss_fn(p, b, cfg, rules),
             prefill=lambda p, b: encdec.prefill(
                 p, b["tokens"], cfg, rules, frames=b["frames"],
-                max_cache_len=cfg.max_cache_len),
+                max_cache_len=cfg.max_cache_len,
+                lengths=b.get("lengths")),
             decode_step=lambda p, tok, st, i: encdec.decode_step(
                 p, tok, st, i, cfg, rules),
             batch_keys=("tokens", "targets", "loss_mask", "frames"),
@@ -99,7 +114,8 @@ def get_model(cfg: ModelConfig, mesh=None,
             loss=lambda p, b: vision.loss_fn(p, b, cfg, rules, mesh),
             prefill=lambda p, b: vision.prefill(
                 p, b["tokens"], cfg, rules, patches=b["patches"],
-                max_cache_len=cfg.max_cache_len, mesh=mesh),
+                max_cache_len=cfg.max_cache_len, mesh=mesh,
+                lengths=b.get("lengths")),
             decode_step=lambda p, tok, st, i: vision.decode_step(
                 p, tok, st, i, cfg, rules, mesh),
             batch_keys=("tokens", "targets", "loss_mask", "patches"),

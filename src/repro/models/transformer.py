@@ -107,7 +107,7 @@ def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
     if positions is None:
         s = tokens.shape[1]
         base = 0 if cache_index is None else cache_index
-        positions = base + jnp.arange(s, dtype=jnp.int32)
+        positions = L.decode_positions(base, s)
 
     if cache is None:
         def body(carry, bp):
@@ -150,21 +150,35 @@ def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules, mesh=None):
 
 
 def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
-            max_cache_len: int, mesh=None):
+            max_cache_len: int, mesh=None, lengths=None):
     """Process a prompt, filling the KV cache. Returns (last_logits, cache,
-    next_index)."""
+    next_index).
+
+    ``lengths`` (B,) enables ragged (left-aligned, right-PAD-padded)
+    prompts: causal masking already keeps real tokens from attending the
+    padding to their right, so the fix is to read each row's logits at its
+    own last *real* position and return per-row next indices — decode then
+    overwrites/masks the stale pad K/V via per-row cache positions. Without
+    ``lengths`` all rows share the compiled prompt length (next_index = s).
+    """
     b, s = tokens.shape
     cache = L.init_kv_cache(cfg, b, max_cache_len)
     hidden, cache = forward(params, tokens, cfg, rules, cache=cache,
                             cache_index=0, mesh=mesh)
-    logits = logits_of(params, hidden[:, -1:], cfg, rules)
-    return logits[:, 0], cache, s
+    if lengths is None:
+        logits = logits_of(params, hidden[:, -1:], cfg, rules)
+        return logits[:, 0], cache, s
+    li = jnp.asarray(lengths, jnp.int32)
+    last = hidden[jnp.arange(b), li - 1]          # (B, D) per-row last real
+    logits = logits_of(params, last[:, None], cfg, rules)
+    return logits[:, 0], cache, li
 
 
 def decode_step(params, token, cache, index, cfg: ModelConfig,
                 rules: ShardingRules, mesh=None):
-    """One decode step. token: (B,) int32; index: scalar current length.
-    Returns (logits (B, V), new_cache)."""
+    """One decode step. token: (B,) int32; index: current length — a scalar
+    (all rows at the same depth) or per-row (B,) positions (continuous
+    batching). Returns (logits (B, V), new_cache)."""
     hidden, cache = forward(params, token[:, None], cfg, rules,
                             cache=cache, cache_index=index, mesh=mesh)
     logits = logits_of(params, hidden, cfg, rules)

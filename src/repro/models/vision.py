@@ -121,7 +121,7 @@ def forward(params, tokens, patches, cfg: ModelConfig, rules: ShardingRules,
     x = L.apply_embed(tokens, params["embed"], cfg, rules)
     s = tokens.shape[1]
     base = 0 if cache_index is None else cache_index
-    positions = base + jnp.arange(s, dtype=jnp.int32)
+    positions = L.decode_positions(base, s)
 
     vis = None
     if patches is not None:
@@ -229,16 +229,21 @@ def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules, mesh=None):
 
 
 def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
-            patches, max_cache_len: int, mesh=None):
+            patches, max_cache_len: int, mesh=None, lengths=None):
     b, s = tokens.shape
     cache = init_cache(cfg, b, max_cache_len)
     hidden, cache = forward(params, tokens, patches, cfg, rules,
                             cache=cache, cache_index=0, mesh=mesh)
-    return _logits(params, hidden[:, -1:], cfg, rules)[:, 0], cache, s
+    if lengths is None:
+        return _logits(params, hidden[:, -1:], cfg, rules)[:, 0], cache, s
+    li = jnp.asarray(lengths, jnp.int32)
+    last = hidden[jnp.arange(b), li - 1]
+    return _logits(params, last[:, None], cfg, rules)[:, 0], cache, li
 
 
 def decode_step(params, token, cache, index, cfg: ModelConfig,
                 rules: ShardingRules, mesh=None):
+    """``index``: scalar or per-row (B,) positions."""
     hidden, cache = forward(params, token[:, None], None, cfg, rules,
                             cache=cache, cache_index=index,
                             cross_kv=cache["cross"], mesh=mesh)

@@ -1,3 +1,19 @@
-"""Serving substrate: batched prefill + decode loop."""
-from .serve_loop import Server, ServeConfig
-__all__ = ["Server", "ServeConfig"]
+"""Serving subsystem: continuous-batching decode over the unified rules.
+
+* ``serve_loop`` — ``Server`` / ``ServeConfig``: the fixed-batch
+  compatibility surface (``generate``), a thin wrapper over the scheduler
+  for token-only attention families, with an in-place batch fallback.
+* ``scheduler`` — ``ContinuousScheduler`` / ``SchedulerConfig`` /
+  ``Request``: request queue + slot table; admit into ``(1, bucket)``
+  prefill buckets, decode the whole slot table with per-row positions,
+  evict on EOS/budget and backfill without recompiling.
+* ``metrics`` — ``ServeMetrics``: submit/admit/first-token/finish
+  timestamps, tokens/sec and p50/p99 latency + TTFT.
+"""
+from .serve_loop import Server, ServeConfig, prompt_lengths
+from .scheduler import ContinuousScheduler, SchedulerConfig, Request
+from .metrics import ServeMetrics
+
+__all__ = ["Server", "ServeConfig", "prompt_lengths",
+           "ContinuousScheduler", "SchedulerConfig", "Request",
+           "ServeMetrics"]

@@ -1,0 +1,87 @@
+"""Latency/throughput accounting for the serving path.
+
+One ``ServeMetrics`` instance rides along a scheduler (or a batch
+``Server.generate`` call) and timestamps the request lifecycle:
+submit -> admit (slot granted) -> first token -> finish. ``summary()``
+derives the numbers the serving story is judged on — tokens/sec and the
+p50/p99 of per-request latency and time-to-first-token.
+
+The clock is injectable so tests can drive it deterministically.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class RequestTiming:
+    submit: float | None = None
+    admit: float | None = None
+    first_token: float | None = None
+    finish: float | None = None
+    tokens: int = 0
+    prompt_len: int = 0
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) — no numpy dependency so the
+    struct stays importable anywhere."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    i = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
+    return ys[i]
+
+
+@dataclass
+class ServeMetrics:
+    clock: callable = time.perf_counter
+    requests: dict[int, RequestTiming] = field(default_factory=dict)
+
+    def _rec(self, rid: int) -> RequestTiming:
+        return self.requests.setdefault(rid, RequestTiming())
+
+    def record_submit(self, rid: int, prompt_len: int = 0) -> None:
+        r = self._rec(rid)
+        r.submit = self.clock()
+        r.prompt_len = prompt_len
+
+    def record_admit(self, rid: int) -> None:
+        self._rec(rid).admit = self.clock()
+
+    def record_token(self, rid: int) -> None:
+        r = self._rec(rid)
+        r.tokens += 1
+        if r.first_token is None:
+            r.first_token = self.clock()
+
+    def record_finish(self, rid: int) -> None:
+        self._rec(rid).finish = self.clock()
+
+    def summary(self) -> dict:
+        done = [r for r in self.requests.values() if r.finish is not None]
+        total_tokens = sum(r.tokens for r in self.requests.values())
+        if not done:
+            return dict(requests=0, tokens=total_tokens,
+                        tokens_per_sec=0.0, p50_latency_s=0.0,
+                        p99_latency_s=0.0, p50_ttft_s=0.0, p99_ttft_s=0.0)
+        t0 = min(r.submit for r in done if r.submit is not None)
+        t1 = max(r.finish for r in done)
+        wall = max(t1 - t0, 1e-9)
+        # throughput counts finished requests' tokens only, over their own
+        # wall span — in-flight tokens would inflate it against a shorter
+        # denominator when summary() is read mid-stream
+        done_tokens = sum(r.tokens for r in done)
+        lat = [r.finish - r.submit for r in done if r.submit is not None]
+        ttft = [r.first_token - r.submit for r in done
+                if r.submit is not None and r.first_token is not None]
+        return dict(
+            requests=len(done),
+            tokens=total_tokens,
+            tokens_per_sec=done_tokens / wall,
+            p50_latency_s=_percentile(lat, 50),
+            p99_latency_s=_percentile(lat, 99),
+            p50_ttft_s=_percentile(ttft, 50),
+            p99_ttft_s=_percentile(ttft, 99),
+        )

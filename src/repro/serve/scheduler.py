@@ -1,0 +1,311 @@
+"""Continuous-batching decode scheduler: request queue + slot table.
+
+The serving problem the paper's §5 "answer a large class of common queries
+quickly" implies: an open-ended stream of session-prefix requests with
+variable prompt lengths, served from fixed-shape device buffers (the TPU
+contract — no recompilation per request). The classic continuous-batching
+recipe:
+
+* A **slot table** of ``batch`` rows. Each slot owns one row of the decode
+  state (KV cache) plus host-side bookkeeping: request id, absolute
+  position, tokens emitted, budget.
+* **Admission** pulls the next queued request, left-aligns its prompt into
+  the smallest compiled ``(1, bucket_len)`` prefill bucket (right-padded
+  with PAD), prefills with per-row ``lengths`` so logits come from the last
+  *real* token, and inserts the resulting row state into a free slot with
+  one ``dynamic_update_slice`` along the batch axis.
+* **Decode** runs one jitted step over the *whole* slot table with per-row
+  position indices — every active slot sits at a different depth; padding
+  K/V is overwritten/masked by the per-row cache write (see
+  ``models.registry`` serving contract). Inactive slots decode garbage that
+  is ignored and overwritten at the next admission.
+* **Eviction** frees a slot the moment its request emits EOS or exhausts
+  its token budget; the next ``_admit`` backfills it from the queue.
+
+Everything device-side is jitted once per shape: one prefill per bucket
+length, one decode step, one row insert. ``trace_counts`` tracks actual
+retraces (a python-level counter bumped only when jit re-traces), which is
+what the no-recompilation-after-warmup test asserts.
+
+Sharding: with ``mesh`` given, params and the KV-cache slab are placed via
+``repro.dist`` rules (``tree_shardings`` over the models' logical axes) and
+every device call runs under ``dist.compat.use_mesh`` — the same rules that
+constrain the batch/kv_heads dims on the production mesh degrade to
+replicated on the host-local test meshes.
+"""
+from __future__ import annotations
+
+import collections
+from contextlib import nullcontext
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..data.pipeline import PAD_ID, EOS_ID
+from ..dist.compat import use_mesh
+from ..dist.sharding import tree_shardings
+from ..models import layers as L
+from ..models.registry import ModelApi
+from .metrics import ServeMetrics
+
+
+@dataclass(frozen=True)
+class Request:
+    rid: int
+    tokens: np.ndarray           # (prompt_len,) int32, no padding
+    max_new_tokens: int
+
+
+@dataclass
+class SchedulerConfig:
+    batch: int = 4                         # slot-table rows
+    buckets: tuple[int, ...] = (16, 32, 64)  # compiled prefill lengths
+    max_new_tokens: int = 32               # default per-request budget
+    temperature: float = 0.0               # 0 = greedy
+    seed: int = 0
+
+
+class ContinuousScheduler:
+    """Serve an open-ended request stream from fixed-shape buffers.
+
+    Supports the attention-cache families whose decode state stacks the
+    batch on axis 1 of every leaf (dense/moe) — exactly what the row
+    insert relies on. SSM-state families need exact-length prompts and a
+    different state layout; they stay on the batch ``Server`` path.
+    """
+
+    SUPPORTED_FAMILIES = ("dense", "moe")
+
+    def __init__(self, api: ModelApi, params, cfg: SchedulerConfig,
+                 mesh=None, metrics: ServeMetrics | None = None):
+        if api.cfg.family not in self.SUPPORTED_FAMILIES:
+            raise ValueError(
+                f"ContinuousScheduler supports {self.SUPPORTED_FAMILIES}, "
+                f"got family {api.cfg.family!r}; use Server.generate's "
+                "batch path for SSM/cross-attention families")
+        # a request writes its last decode input at prompt_len + budget - 2,
+        # so the cache must hold max(buckets) + max_new_tokens - 1 positions
+        if api.cfg.max_cache_len < max(cfg.buckets) + cfg.max_new_tokens - 1:
+            raise ValueError(
+                f"max_cache_len={api.cfg.max_cache_len} cannot hold the "
+                f"largest bucket {max(cfg.buckets)} plus "
+                f"{cfg.max_new_tokens} generated tokens")
+        self.api = api
+        self.cfg = cfg
+        self.mesh = mesh
+        self.metrics = metrics
+        self.trace_counts = collections.Counter()
+        self.decode_steps = 0
+        self.prefills = 0
+
+        if mesh is not None:
+            params = jax.device_put(
+                params, tree_shardings(api.axes(), api.rules, mesh))
+        self.params = params
+
+        temp = cfg.temperature
+
+        def sample(logits, key):
+            if temp <= 0.0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return jax.random.categorical(
+                key, logits / temp, axis=-1).astype(jnp.int32)
+
+        def prefill_fn(p, toks, lengths, key):
+            logits, state, idx = api.prefill(
+                p, dict(tokens=toks, lengths=lengths))
+            return sample(logits, key), state, idx
+
+        def step_fn(p, cur_tok, state, pos, active, key):
+            # inactive slots decode at position 0: their row state is dead
+            # (fully overwritten by the next insert) so the garbage write
+            # is harmless, and clamping keeps the scatter in bounds.
+            safe_pos = jnp.where(active, pos, 0)
+            logits, state = api.decode_step(p, cur_tok, state, safe_pos)
+            nxt = sample(logits, key)
+            return jnp.where(active, nxt, PAD_ID), state
+
+        def insert_fn(state, row_state, slot):
+            return jax.tree.map(
+                lambda c, r: jax.lax.dynamic_update_slice_in_dim(
+                    c, r.astype(c.dtype), slot, axis=1),
+                state, row_state)
+
+        self._prefill = jax.jit(self._counted("prefill", prefill_fn))
+        self._step = jax.jit(self._counted("decode", step_fn))
+        self._insert = jax.jit(self._counted("insert", insert_fn))
+
+        # slot table (host-side bookkeeping)
+        B = cfg.batch
+        self._active = np.zeros(B, bool)
+        self._slot_rid = np.full(B, -1, np.int64)
+        self._pos = np.zeros(B, np.int32)
+        self._cur_tok = np.zeros(B, np.int32)
+        self._emitted = np.zeros(B, np.int32)
+        self._budget = np.zeros(B, np.int32)
+
+        self._pending: collections.deque[Request] = collections.deque()
+        self._next_rid = 0
+        self._step_counter = 0
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self.outputs: dict[int, list[int]] = {}
+        self._state = self._init_state()
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _counted(self, name, fn):
+        def wrapped(*args):
+            # runs only when jit (re)traces — a cache hit never reaches here
+            self.trace_counts[name] += 1
+            return fn(*args)
+        return wrapped
+
+    def _ctx(self):
+        return use_mesh(self.mesh) if self.mesh is not None else nullcontext()
+
+    def _init_state(self):
+        """Zero decode state of the full-slot-table shape, via eval_shape
+        (no wasted prefill compute, no extra compile)."""
+        B, b0 = self.cfg.batch, self.cfg.buckets[0]
+        shapes = jax.eval_shape(
+            lambda p: self.api.prefill(p, dict(
+                tokens=jnp.zeros((B, b0), jnp.int32),
+                lengths=jnp.ones((B,), jnp.int32)))[1],
+            self.params)
+        state = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), shapes)
+        if self.mesh is not None:
+            try:
+                shardings = tree_shardings(L.kv_cache_axes(), self.api.rules,
+                                           self.mesh)
+                state = jax.device_put(state, shardings)
+            except ValueError:
+                pass  # state tree doesn't match the plain KV layout
+        return state
+
+    # -- public API --------------------------------------------------------
+
+    def submit(self, tokens, max_new_tokens: int | None = None) -> int:
+        """Queue one request; returns its rid. ``tokens``: (prompt_len,)."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        if len(toks) == 0:
+            toks = np.array([PAD_ID], np.int32)
+        if len(toks) > max(self.cfg.buckets):
+            raise ValueError(
+                f"prompt length {len(toks)} exceeds the largest bucket "
+                f"{max(self.cfg.buckets)}")
+        budget = (self.cfg.max_new_tokens if max_new_tokens is None
+                  else max_new_tokens)
+        if len(toks) + budget - 1 > self.api.cfg.max_cache_len:
+            raise ValueError(
+                f"prompt length {len(toks)} + budget {budget} overflows "
+                f"max_cache_len={self.api.cfg.max_cache_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, tokens=toks, max_new_tokens=budget)
+        self._pending.append(req)
+        if self.metrics is not None:
+            self.metrics.record_submit(rid, prompt_len=len(toks))
+        return rid
+
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._pending)
+
+    def _bucket_for(self, n: int) -> int:
+        for b in sorted(self.cfg.buckets):
+            if n <= b:
+                return b
+        raise ValueError(n)
+
+    def _finish(self, rid: int) -> None:
+        if self.metrics is not None:
+            self.metrics.record_finish(rid)
+
+    def _admit(self) -> None:
+        """Backfill free slots from the queue (prefill + row insert)."""
+        free = np.flatnonzero(~self._active)
+        fi = 0
+        while self._pending and fi < len(free):
+            req = self._pending.popleft()
+            slot = int(free[fi])
+            n = len(req.tokens)
+            bucket = self._bucket_for(n)
+            toks = np.full((1, bucket), PAD_ID, np.int32)
+            toks[0, :n] = req.tokens
+            key = jax.random.fold_in(
+                jax.random.fold_in(self._key, 1), req.rid)
+            with self._ctx():
+                tok0, row_state, idx = self._prefill(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray([n], jnp.int32), key)
+            self.prefills += 1
+            if self.metrics is not None:
+                self.metrics.record_admit(req.rid)
+            t0 = int(np.asarray(tok0)[0])
+            self.outputs[req.rid] = [t0]
+            if self.metrics is not None:
+                self.metrics.record_token(req.rid)
+            if t0 == EOS_ID or req.max_new_tokens <= 1:
+                self._finish(req.rid)      # done at admission: slot stays free
+                continue
+            with self._ctx():
+                self._state = self._insert(self._state, row_state,
+                                           jnp.int32(slot))
+            self._active[slot] = True
+            self._slot_rid[slot] = req.rid
+            self._pos[slot] = n
+            self._cur_tok[slot] = t0
+            self._emitted[slot] = 1
+            self._budget[slot] = req.max_new_tokens
+            fi += 1
+
+    def step(self) -> dict[int, int]:
+        """One decode step over the whole slot table; returns this step's
+        emissions {rid: token}. Evicts finished rows and backfills."""
+        self._admit()
+        if not self._active.any():
+            return {}
+        key = jax.random.fold_in(self._key, 2 * self._step_counter)
+        self._step_counter += 1
+        with self._ctx():
+            nxt, self._state = self._step(
+                self.params, jnp.asarray(self._cur_tok), self._state,
+                jnp.asarray(self._pos), jnp.asarray(self._active), key)
+        self.decode_steps += 1
+        nxt = np.asarray(nxt)
+        emissions: dict[int, int] = {}
+        for slot in np.flatnonzero(self._active):
+            rid = int(self._slot_rid[slot])
+            tok = int(nxt[slot])
+            emissions[rid] = tok
+            self.outputs[rid].append(tok)
+            self._emitted[slot] += 1
+            self._pos[slot] += 1
+            if self.metrics is not None:
+                self.metrics.record_token(rid)
+            if tok == EOS_ID or self._emitted[slot] >= self._budget[slot]:
+                self._finish(rid)
+                self._active[slot] = False     # evict; backfilled next admit
+                self._slot_rid[slot] = -1
+        self._cur_tok = nxt.astype(np.int32)
+        self._admit()
+        return emissions
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain the queue: admit/decode/evict until every submitted request
+        has finished. Returns {rid: (n_tokens,) int32} for the requests
+        drained since the last ``run`` and releases them — the open-ended
+        stream never accumulates history device- or host-side."""
+        self._admit()
+        while self._active.any() or self._pending:
+            self.step()
+        done = {rid: np.asarray(toks, np.int32)
+                for rid, toks in self.outputs.items()}
+        self.outputs = {}
+        return done

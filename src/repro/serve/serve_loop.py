@@ -1,8 +1,19 @@
 """Serving loop: batched prefill + incremental decode.
 
-Requests are padded/batched to the compiled (batch, prompt_len) buckets —
-one jitted prefill and one jitted decode_step per bucket, the standard
-static-shape TPU serving recipe. Sampling: greedy or temperature.
+``Server.generate`` is the fixed-batch compatibility surface. For
+token-only attention-cache families (dense/moe) it is a thin wrapper over
+the continuous-batching ``ContinuousScheduler`` (scheduler.py): each row is
+trimmed to its real length, admitted as one request, and decoded with
+per-row positions — so right-padded prompts decode bit-identically to
+their trimmed copies. Families the scheduler cannot host (SSM state, or
+cross-attention extras like frames/patches) fall back to an in-place batch
+loop with the same correctness fixes:
+
+* the RNG key is split *before* the first post-prefill sample, so the
+  prefill-token draw and later decode draws are independent streams;
+* the loop never launches a decode whose logits would be discarded, and
+  short-circuits as soon as every row has emitted EOS;
+* rows that hit EOS stay frozen at EOS.
 """
 from __future__ import annotations
 
@@ -13,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.registry import ModelApi
-from ..data.pipeline import PAD_ID, BOS_ID, EOS_ID
+from ..data.pipeline import PAD_ID, EOS_ID
+from .scheduler import ContinuousScheduler, SchedulerConfig
 
 
 @dataclass
@@ -23,14 +35,28 @@ class ServeConfig:
     seed: int = 0
 
 
+def prompt_lengths(prompts: np.ndarray) -> np.ndarray:
+    """Per-row real lengths of right-PAD-padded prompts: one past the last
+    non-PAD token, clamped to >= 1 (an all-PAD row serves a length-1 pad
+    prompt rather than an illegal empty one)."""
+    prompts = np.asarray(prompts)
+    not_pad = prompts != PAD_ID
+    lens = prompts.shape[1] - np.argmax(not_pad[:, ::-1], axis=1)
+    lens = np.where(not_pad.any(axis=1), lens, 1)
+    return lens.astype(np.int32)
+
+
 class Server:
-    def __init__(self, api: ModelApi, params, scfg: ServeConfig):
+    def __init__(self, api: ModelApi, params, scfg: ServeConfig, mesh=None):
         self.api = api
         self.params = params
         self.scfg = scfg
+        self.mesh = mesh
         self._prefill = jax.jit(lambda p, b: api.prefill(p, b))
         self._decode = jax.jit(
             lambda p, tok, st, i: api.decode_step(p, tok, st, i))
+        self.decode_calls = 0        # batch-path decode_step invocations
+        self._schedulers: dict[tuple, ContinuousScheduler] = {}
 
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0.0:
@@ -38,27 +64,88 @@ class Server:
         return jax.random.categorical(
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
 
-    def generate(self, prompts: np.ndarray, extra: dict | None = None):
-        """prompts: (B, L) int32, PAD-padded on the right (all rows share
-        the compiled prompt length). Returns (B, max_new_tokens) tokens.
+    def _bucket_width(self, prompt_len: int) -> int:
+        """Round the prefill width up a power-of-two ladder so generate()
+        calls with nearby prompt widths share one compiled scheduler (rows
+        are trimmed to real length before submit, so the width is only a
+        compilation key). Falls back to the exact width when the rounded
+        bucket would overflow the KV cache but the prompt itself fits."""
+        b = 8
+        while b < prompt_len:
+            b *= 2
+        cap = self.api.cfg.max_cache_len - self.scfg.max_new_tokens + 1
+        return b if b <= cap else prompt_len
 
-        NOTE: right-padded prompts shorter than L will attend to their own
-        padding; serving-quality masking uses per-row lengths — we decode
-        from the common prompt length (the bucket contract).
+    def scheduler_for(self, batch: int, bucket: int) -> ContinuousScheduler:
+        """The cached continuous scheduler for a (slots, bucket) shape —
+        cached so repeated generate() calls reuse the compiled fns."""
+        key = (batch, bucket)
+        if key not in self._schedulers:
+            self._schedulers[key] = ContinuousScheduler(
+                self.api, self.params,
+                SchedulerConfig(batch=batch, buckets=(bucket,),
+                                max_new_tokens=self.scfg.max_new_tokens,
+                                temperature=self.scfg.temperature,
+                                seed=self.scfg.seed),
+                mesh=self.mesh)
+        return self._schedulers[key]
+
+    def generate(self, prompts: np.ndarray, extra: dict | None = None):
+        """prompts: (B, L) int32, PAD-padded on the right. Returns
+        (B, max_new_tokens) tokens; rows freeze at EOS once emitted.
+
+        Right-padded rows are decoded with per-row lengths (prefill reads
+        each row's last real token; decode masks by per-row position), so a
+        padded prompt decodes identically to its trimmed copy.
         """
+        prompts = np.asarray(prompts, np.int32)
+        if extra is None and \
+                self.api.cfg.family in ContinuousScheduler.SUPPORTED_FAMILIES:
+            return self._generate_continuous(prompts)
+        return self._generate_batch(prompts, extra)
+
+    def _generate_continuous(self, prompts: np.ndarray):
         b, l = prompts.shape
+        lens = prompt_lengths(prompts)
+        sched = self.scheduler_for(b, self._bucket_width(int(lens.max())))
+        rids = [sched.submit(prompts[i, :lens[i]],
+                             max_new_tokens=self.scfg.max_new_tokens)
+                for i in range(b)]
+        outs = sched.run()
+        n = self.scfg.max_new_tokens
+        rows = []
+        for rid in rids:
+            toks = outs[rid][:n]
+            rows.append(np.concatenate(
+                [toks, np.full(n - len(toks), EOS_ID, np.int32)]))
+        return np.stack(rows, axis=0)
+
+    def _generate_batch(self, prompts: np.ndarray, extra: dict | None):
+        """Fallback fixed-batch loop (SSM families / frames / patches)."""
+        b, l = prompts.shape
+        fam = self.api.cfg.family
         batch = dict(tokens=jnp.asarray(prompts, jnp.int32))
+        if fam not in ("ssm", "hybrid"):
+            # attention-cache families honor ragged rows; SSM state would
+            # be poisoned by pads, so those keep the full-bucket contract.
+            batch["lengths"] = jnp.asarray(prompt_lengths(prompts))
         if extra:
             batch.update({k: jnp.asarray(v) for k, v in extra.items()})
         logits, state, index = self._prefill(self.params, batch)
-        key = jax.random.PRNGKey(self.scfg.seed)
+        key, sub = jax.random.split(jax.random.PRNGKey(self.scfg.seed))
         out = []
-        tok = self._sample(logits, key)
+        tok = self._sample(logits, sub)
         done = jnp.zeros((b,), bool)
-        for t in range(self.scfg.max_new_tokens):
+        n = self.scfg.max_new_tokens
+        for t in range(n):
             out.append(np.asarray(tok))
             done = done | (tok == EOS_ID)
+            if t == n - 1 or bool(done.all()):
+                break      # never launch a decode whose logits are unused
             key, sub = jax.random.split(key)
             logits, state = self._decode(self.params, tok, state, index + t)
+            self.decode_calls += 1
             tok = jnp.where(done, EOS_ID, self._sample(logits, sub))
+        while len(out) < n:          # EOS-frozen tail after short-circuit
+            out.append(np.full((b,), EOS_ID, np.int32))
         return np.stack(out, axis=1)

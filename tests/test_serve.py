@@ -1,0 +1,313 @@
+"""Serving subsystem tests: decode-loop correctness fixes, ragged
+prefill-mask equivalence, and continuous-batching scheduler invariants.
+
+Two kinds of model drive these:
+
+* the real smoke behaviour LM (dense) for numerical properties — greedy
+  determinism and the padded-vs-trimmed bit-equality the per-row position
+  masking guarantees;
+* a deterministic stub ModelApi (an "echo+1, EOS after k steps" machine
+  with a real KV-cache-shaped state) for machinery properties — exact
+  decode-step counts, EOS freezing, admit/evict/backfill accounting and
+  the no-recompilation-after-warmup contract.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.registry import get_model, ModelApi
+from repro.data.pipeline import PAD_ID, EOS_ID
+from repro.dist import make_host_mesh, REPLICATED
+from repro.serve import (Server, ServeConfig, ContinuousScheduler,
+                         SchedulerConfig, ServeMetrics, prompt_lengths)
+
+VOCAB = 64
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = smoke_config("behavior-lm-100m").with_(vocab_size=VOCAB,
+                                                 max_cache_len=64)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return api, params
+
+
+# ---------------------------------------------------------------------------
+# Stub model: next token = clip(prev + 1), EOS after `eos_after` decodes.
+# State leaves are (X, B, ...) so the scheduler's axis-1 row insert works.
+# ---------------------------------------------------------------------------
+
+def _stub_api(eos_after: int = 3, family: str = "dense") -> ModelApi:
+    cfg = smoke_config("behavior-lm-100m").with_(
+        vocab_size=VOCAB, max_cache_len=64, family=family)
+
+    def _next(tok):
+        return jnp.clip(tok + 1, 4, VOCAB - 1).astype(jnp.int32)
+
+    def prefill(p, b):
+        toks = jnp.asarray(b["tokens"])
+        bsz, l = toks.shape
+        lengths = b.get("lengths")
+        if lengths is None:
+            last, idx = toks[:, -1], l
+        else:
+            li = jnp.asarray(lengths, jnp.int32)
+            last, idx = toks[jnp.arange(bsz), li - 1], li
+        state = dict(kv=jnp.zeros((1, bsz, 1, cfg.max_cache_len, 1)),
+                     gen=jnp.zeros((1, bsz), jnp.int32))
+        return 10.0 * jax.nn.one_hot(_next(last), VOCAB), state, idx
+
+    def decode_step(p, tok, state, idx):
+        gen = state["gen"] + 1
+        nxt = jnp.where(gen[0] >= eos_after, EOS_ID, _next(tok))
+        return 10.0 * jax.nn.one_hot(nxt, VOCAB), \
+            dict(kv=state["kv"], gen=gen)
+
+    return ModelApi(cfg=cfg, rules=REPLICATED, mesh=None,
+                    init=lambda key: {}, axes=lambda: {},
+                    loss=None, prefill=prefill, decode_step=decode_step,
+                    batch_keys=("tokens",))
+
+
+def _stub_expected(prompt, budget, eos_after):
+    """The stub's deterministic output for one request."""
+    out = [min(int(prompt[-1]) + 1, VOCAB - 1)]
+    for k in range(1, budget):
+        if k >= eos_after:
+            out.append(EOS_ID)
+            break
+        out.append(min(out[-1] + 1, VOCAB - 1))
+    return np.array(out[:budget], np.int32)
+
+
+def _rand_prompts(rng, n, lo=3, hi=15):
+    return [rng.integers(4, VOCAB, int(rng.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# prompt length derivation
+# ---------------------------------------------------------------------------
+
+def test_prompt_lengths():
+    p = np.array([[5, 6, 7, 0, 0],
+                  [5, 6, 7, 8, 9],
+                  [0, 0, 0, 0, 0]], np.int32)
+    assert prompt_lengths(p).tolist() == [3, 5, 1]
+
+
+# ---------------------------------------------------------------------------
+# Server: greedy determinism + padded/trimmed bit-equality (real model)
+# ---------------------------------------------------------------------------
+
+def test_greedy_decode_deterministic(dense):
+    api, params = dense
+    srv = Server(api, params, ServeConfig(max_new_tokens=6))
+    rng = np.random.default_rng(0)
+    prompts = np.full((3, 12), PAD_ID, np.int32)
+    for i, l in enumerate((12, 7, 4)):
+        prompts[i, :l] = rng.integers(4, VOCAB, l)
+    g1 = srv.generate(prompts)
+    g2 = srv.generate(prompts)
+    assert g1.shape == (3, 6)
+    assert np.array_equal(g1, g2)
+
+
+def test_padded_prompt_decodes_bit_equal_to_trimmed(dense):
+    api, params = dense
+    srv = Server(api, params, ServeConfig(max_new_tokens=6))
+    rng = np.random.default_rng(1)
+    for l in (3, 5, 9):
+        prompts = np.full((2, 12), PAD_ID, np.int32)
+        prompts[0] = rng.integers(4, VOCAB, 12)
+        prompts[1, :l] = rng.integers(4, VOCAB, l)
+        padded = srv.generate(prompts)
+        trimmed = srv.generate(prompts[1:2, :l])
+        assert np.array_equal(padded[1], trimmed[0]), l
+
+
+def test_ragged_prefill_rejected_for_ssm_state():
+    cfg = smoke_config("mamba2-370m").with_(vocab_size=VOCAB)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jnp.ones((2, 8), jnp.int32)
+    with pytest.raises(ValueError, match="per-row lengths"):
+        api.prefill(params, dict(tokens=toks,
+                                 lengths=jnp.array([8, 5], jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# RNG regression: the prefill-token draw must come from a split subkey,
+# independent of later decode draws; different seeds differ at token 0.
+# ---------------------------------------------------------------------------
+
+def test_temperature_seeds_differ_at_token0(dense):
+    api, params = dense
+    rng = np.random.default_rng(2)
+    prompts = rng.integers(4, VOCAB, (4, 8)).astype(np.int32)
+    g0 = Server(api, params, ServeConfig(
+        max_new_tokens=3, temperature=2.0, seed=0)).generate(prompts)
+    g1 = Server(api, params, ServeConfig(
+        max_new_tokens=3, temperature=2.0, seed=1)).generate(prompts)
+    assert (g0[:, 0] != g1[:, 0]).any()
+    # same seed stays reproducible
+    g0b = Server(api, params, ServeConfig(
+        max_new_tokens=3, temperature=2.0, seed=0)).generate(prompts)
+    assert np.array_equal(g0, g0b)
+
+
+def test_batch_path_first_sample_uses_split_subkey():
+    # ssm smoke model exercises the fallback batch loop
+    cfg = smoke_config("mamba2-370m").with_(vocab_size=VOCAB)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(3).integers(
+        4, VOCAB, (2, 8)).astype(np.int32)
+    temp, seed = 2.0, 0
+    srv = Server(api, params, ServeConfig(
+        max_new_tokens=2, temperature=temp, seed=seed))
+    got = srv.generate(prompts)[:, 0]
+    # same jitted prefill the server used, so logits match bitwise
+    logits, _, _ = srv._prefill(params, dict(tokens=jnp.asarray(prompts)))
+    _, sub = jax.random.split(jax.random.PRNGKey(seed))
+    expected = jax.random.categorical(sub, logits / temp, axis=-1)
+    assert np.array_equal(got, np.asarray(expected))
+    # and NOT the pre-fix draw from the raw (reused) parent key
+    buggy = jax.random.categorical(
+        jax.random.PRNGKey(seed), logits / temp, axis=-1)
+    if not np.array_equal(np.asarray(buggy), np.asarray(expected)):
+        assert not np.array_equal(got, np.asarray(buggy))
+
+
+# ---------------------------------------------------------------------------
+# off-by-one + EOS short-circuit (exact decode counts via the stub)
+# ---------------------------------------------------------------------------
+
+def test_no_discarded_decode_step():
+    api = _stub_api(eos_after=99, family="ssm")   # ssm -> batch path
+    srv = Server(api, {}, ServeConfig(max_new_tokens=4))
+    out = srv.generate(np.full((1, 5), 7, np.int32))
+    # 4 tokens = 1 prefill sample + exactly 3 decodes (the old loop ran 4)
+    assert srv.decode_calls == 3
+    assert out.tolist() == [[8, 9, 10, 11]]
+
+
+def test_eos_short_circuits_batch_loop():
+    api = _stub_api(eos_after=2, family="ssm")
+    srv = Server(api, {}, ServeConfig(max_new_tokens=8))
+    out = srv.generate(np.full((1, 5), 7, np.int32))
+    # tokens: 8, 9, EOS then frozen — only 2 decodes ever launched
+    assert srv.decode_calls == 2
+    assert out.tolist() == [[8, 9, EOS_ID] + [EOS_ID] * 5]
+
+
+def test_scheduler_decode_step_counts():
+    api = _stub_api(eos_after=99)
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=6))
+    sched.submit(np.full(5, 7, np.int32))
+    sched.run()
+    assert sched.decode_steps == 5          # 6 tokens, first from prefill
+    # budget 1: finished at admission, no decode at all
+    before = sched.decode_steps
+    sched.submit(np.full(5, 7, np.int32), max_new_tokens=1)
+    out = sched.run()
+    assert sched.decode_steps == before
+    assert out[1].tolist() == [8]
+
+
+# ---------------------------------------------------------------------------
+# scheduler: admit/evict/backfill invariants + no recompilation after warmup
+# ---------------------------------------------------------------------------
+
+def test_scheduler_stream_invariants_and_jit_cache_hits():
+    eos_after = 4
+    api = _stub_api(eos_after=eos_after)
+    mesh = make_host_mesh(1, 1)
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8, 16), max_new_tokens=6), mesh=mesh)
+    rng = np.random.default_rng(4)
+
+    # warmup: one request per bucket
+    w1, w2 = np.full(6, 9, np.int32), np.full(12, 9, np.int32)
+    sched.submit(w1), sched.submit(w2)
+    sched.run()
+    warm = dict(sched.trace_counts)
+    assert warm["prefill"] == 2             # one trace per bucket
+    assert warm["decode"] == 1
+    assert warm["insert"] == 1
+
+    # stream of 8 = 4x slot count, variable lengths across both buckets
+    prompts = _rand_prompts(rng, 8, lo=3, hi=16)
+    rids = [sched.submit(p) for p in prompts]
+    max_active = 0
+    while sched.num_active or sched.num_pending:
+        sched.step()
+        max_active = max(max_active, sched.num_active)
+    outs = sched.run()
+
+    assert dict(sched.trace_counts) == warm   # jit cache hits only
+    assert max_active <= 2                    # never exceeds the slot table
+    for rid, p in zip(rids, prompts):
+        np.testing.assert_array_equal(
+            outs[rid], _stub_expected(p, 6, eos_after), err_msg=str(rid))
+
+
+def test_scheduler_metrics_lifecycle():
+    api = _stub_api(eos_after=3)
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    m = ServeMetrics(clock=clock)
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=4), metrics=m)
+    for p in _rand_prompts(np.random.default_rng(5), 4, lo=3, hi=8):
+        sched.submit(p)
+    sched.run()
+    s = m.summary()
+    assert s["requests"] == 4
+    assert s["tokens"] == sum(r.tokens for r in m.requests.values())
+    assert s["tokens_per_sec"] > 0
+    assert s["p99_latency_s"] >= s["p50_latency_s"] > 0
+    for r in m.requests.values():
+        assert r.submit < r.admit <= r.first_token < r.finish
+
+
+def test_scheduler_real_model_matches_single_request(dense):
+    """Continuous slots vs one-request-at-a-time: greedy outputs agree."""
+    api, params = dense
+    sched = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=3, buckets=(8, 16), max_new_tokens=5))
+    prompts = _rand_prompts(np.random.default_rng(6), 7, lo=3, hi=16)
+    rids = [sched.submit(p) for p in prompts]
+    outs = sched.run()
+    solo = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=1, buckets=(8, 16), max_new_tokens=5))
+    for rid, p in zip(rids[:3], prompts[:3]):
+        srid = solo.submit(p)
+        np.testing.assert_array_equal(solo.run()[srid], outs[rid])
+
+
+def test_scheduler_rejects_unsupported_family():
+    api = _stub_api(family="ssm")
+    with pytest.raises(ValueError, match="supports"):
+        ContinuousScheduler(api, {}, SchedulerConfig(batch=2, buckets=(8,)))
+
+
+def test_scheduler_rejects_oversized_prompt_and_cache():
+    api = _stub_api()
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8,)))
+    with pytest.raises(ValueError, match="largest bucket"):
+        sched.submit(np.full(9, 7, np.int32))
+    with pytest.raises(ValueError, match="overflows"):
+        # per-request budget that would decode past the KV cache
+        sched.submit(np.full(8, 7, np.int32), max_new_tokens=1000)
+    with pytest.raises(ValueError, match="max_cache_len"):
+        ContinuousScheduler(api, {}, SchedulerConfig(batch=2, buckets=(64,)))
