@@ -15,6 +15,7 @@ artifacts; see EXPERIMENTS.md).
 from __future__ import annotations
 
 import argparse
+import json
 
 
 def main() -> None:
@@ -26,12 +27,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(sections), nargs="+",
                     help="run only these sections (default: all)")
+    ap.add_argument("--json", action="store_true",
+                    help="also write each section's machine-readable "
+                         "payload (BENCH_<section>.json next to the CSV) "
+                         "so the perf trajectory is recorded")
     args = ap.parse_args()
     picked = args.only or list(sections)
     print("name,us_per_call,derived")
     for name in picked:
-        for line in sections[name].run():
+        mod = sections[name]
+        for line in mod.run():
             print(line, flush=True)
+        payload = getattr(mod, "LAST_JSON", None)
+        if args.json and payload is not None:
+            path = getattr(mod, "JSON_PATH", f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+                f.write("\n")
 
 
 if __name__ == "__main__":

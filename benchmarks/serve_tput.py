@@ -1,4 +1,4 @@
-"""Serving throughput and latency: fixed single-batch vs continuous batching.
+"""Serving throughput and latency: fixed single-batch vs continuous vs paged.
 
 The same request stream (3x slot-count requests, variable prompt lengths,
 all queued at t=0) served two ways over the same smoke behaviour LM:
@@ -10,6 +10,14 @@ all queued at t=0) served two ways over the same smoke behaviour LM:
 * ``serve_continuous``   — the slot-table scheduler: admit/evict/backfill,
   per-row positions, eviction on EOS/budget frees the slot immediately.
 
+Then the paged-KV comparison at **equal slab bytes**: a short-dominated
+stream served by the dense slot table (every row pins a ``max_cache_len``
+stripe) vs the paged scheduler (the same bytes as fixed blocks shared by
+many more rows). ``serve_dense`` / ``serve_paged`` rows report tokens/sec,
+slab bytes, and the number of concurrently admitted requests; the paged
+row must admit >= 2x the dense row (asserted). With ``run.py --json`` the
+same numbers land machine-readably in ``BENCH_serve.json``.
+
 Rows report tokens/sec plus the p50/p99 per-request latency derived from
 the t=0 queue-arrival model.
 """
@@ -20,6 +28,10 @@ import time
 import numpy as np
 
 from .common import row
+
+# populated by run(); written to JSON_PATH by `benchmarks.run --json`
+JSON_PATH = "BENCH_serve.json"
+LAST_JSON: dict | None = None
 
 
 def _requests(n: int, bucket: int, seed: int = 0):
@@ -86,7 +98,7 @@ def run() -> list[str]:
     lat_cont = [t.finish - t.submit for t in metrics.requests.values()
                 if t.finish is not None and t.submit is not None]
 
-    return [
+    rows = [
         row("serve_single_batch", wall_single * 1e6,
             f"{tok_single / wall_single:.1f} tok/s "
             f"p50={_pct(lat_single, 50) * 1e3:.0f}ms "
@@ -99,3 +111,94 @@ def run() -> list[str]:
             f"p99={_pct(lat_cont, 99) * 1e3:.0f}ms "
             f"{summ['requests']} reqs slots={batch} 0 retraces"),
     ]
+
+    # -- paged vs dense at equal slab bytes --------------------------------
+    # Dense: 4 slots x 64-position stripes. Paged: the same device bytes as
+    # 31 allocatable blocks of 8 tokens (+ the trash block) shared by a
+    # 16-row slot table. The stream is short-dominated (prompt 4..8,
+    # budget 6 -> 2 blocks/request), the shape the dense stripe wastes.
+    block_size = 8
+    dense_slots = batch
+    max_blocks = cfg.max_cache_len // block_size
+    pool_blocks = dense_slots * max_blocks - 1      # -1: the trash block
+    paged_slots, budget, n_short = 16, 6, 32
+    rng = np.random.default_rng(7)
+    short = [rng.integers(4, 64, int(rng.integers(4, 9))).astype(np.int32)
+             for _ in range(n_short)]
+
+    def drain(sched):
+        """Submit the whole stream at t=0, drain, return the peak number of
+        concurrently admitted requests."""
+        rids = [sched.submit(p, max_new_tokens=budget) for p in short]
+        peak = 0
+        while sched.num_active or sched.num_pending:
+            sched.step()
+            peak = max(peak, sched.num_active)
+        outs = sched.run()
+        return peak, [outs[r] for r in rids]
+
+    dense_sched = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=dense_slots, buckets=(bucket,), max_new_tokens=budget))
+    drain(dense_sched)                              # warmup
+    dense_metrics = ServeMetrics()
+    dense_sched.metrics = dense_metrics
+    dense_peak, dense_outs = drain(dense_sched)
+
+    paged_sched = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=paged_slots, buckets=(bucket,), max_new_tokens=budget,
+        paged=True, block_size=block_size, num_blocks=pool_blocks))
+    drain(paged_sched)                              # warmup
+    warm_paged = dict(paged_sched.trace_counts)
+    paged_metrics = ServeMetrics()
+    paged_sched.metrics = paged_metrics
+    paged_peak, paged_outs = drain(paged_sched)
+    assert dict(paged_sched.trace_counts) == warm_paged, \
+        "paged scheduler recompiled after warmup"
+
+    for a, b in zip(dense_outs, paged_outs):        # same stream, same toks
+        np.testing.assert_array_equal(a, b)
+
+    kv_bytes = paged_sched.pool.block_bytes // block_size   # per position
+    dense_bytes = dense_slots * cfg.max_cache_len * kv_bytes
+    paged_bytes = paged_sched.pool.slab_bytes
+    assert paged_bytes == dense_bytes, (paged_bytes, dense_bytes)
+    assert paged_peak >= 2 * dense_peak, \
+        f"paged admitted {paged_peak} < 2x dense {dense_peak}"
+
+    ds, ps = dense_metrics.summary(), paged_metrics.summary()
+    rows += [
+        row("serve_dense", (ds['tokens'] / ds['tokens_per_sec']) * 1e6
+            if ds['tokens_per_sec'] else 0.0,
+            f"{ds['tokens_per_sec']:.1f} tok/s slab={dense_bytes}B "
+            f"admitted={dense_peak} slots={dense_slots} "
+            f"util={ds['kv_util_peak']:.0%}"),
+        row("serve_paged", (ps['tokens'] / ps['tokens_per_sec']) * 1e6
+            if ps['tokens_per_sec'] else 0.0,
+            f"{ps['tokens_per_sec']:.1f} tok/s slab={paged_bytes}B "
+            f"admitted={paged_peak} blocks={pool_blocks}x{block_size} "
+            f"util={ps['kv_util_peak']:.0%} 0 retraces"),
+    ]
+
+    global LAST_JSON
+    LAST_JSON = dict(
+        stream=dict(requests=n_short, prompt_len="4..8", budget=budget,
+                    model="behavior-lm-100m-smoke",
+                    max_cache_len=cfg.max_cache_len),
+        dense=dict(slab_bytes=int(dense_bytes), slots=dense_slots,
+                   admitted_peak=int(dense_peak),
+                   tokens_per_sec=ds["tokens_per_sec"],
+                   p50_latency_s=ds["p50_latency_s"],
+                   p99_latency_s=ds["p99_latency_s"],
+                   kv_util_peak=ds["kv_util_peak"],
+                   kv_peak_resident_bytes=ds["kv_peak_resident_bytes"]),
+        paged=dict(slab_bytes=int(paged_bytes), slots=paged_slots,
+                   num_blocks=pool_blocks, block_size=block_size,
+                   admitted_peak=int(paged_peak),
+                   tokens_per_sec=ps["tokens_per_sec"],
+                   p50_latency_s=ps["p50_latency_s"],
+                   p99_latency_s=ps["p99_latency_s"],
+                   kv_util_peak=ps["kv_util_peak"],
+                   kv_peak_resident_bytes=ps["kv_peak_resident_bytes"]),
+        admission_gain=paged_peak / max(dense_peak, 1),
+    )
+    return rows

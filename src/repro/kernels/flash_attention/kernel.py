@@ -84,6 +84,117 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(table_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, scale: float,
+                         block_size: int, num_blocks: int):
+    ib = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kvl = kvlen_ref[ib]
+
+    # Blocks entirely past the row's length hold trash-block or stale data;
+    # skipping them leaves the running statistics untouched — this is the
+    # block-sparse part: compute (and, with scalar-prefetched index maps on
+    # TPU, the tile fetch) scales with kv_len, not max_cache_len.
+    @pl.when(j * block_size < kvl)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)         # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)         # (bs, d)
+        v = v_ref[0, 0].astype(jnp.float32)         # (bs, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        # Absolute position of lane t in this block is j*bs + t; the query
+        # sits at kv_len - 1, so the kv_len mask subsumes the causal mask.
+        kpos = j * block_size + jax.lax.broadcasted_iota(jnp.int32,
+                                                         s.shape, 1)
+        s = jnp.where(kpos >= kvl, NEG_INF, s)
+
+        m_prev = m_ref[...]                         # (1,)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == num_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q, k_pool, v_pool, block_table, kv_len, *,
+                               scale: float | None = None,
+                               interpret: bool = False):
+    """Paged decode attention — Pallas TPU kernel (interpret mode on CPU).
+
+    q: (B, H, 1, D); k_pool/v_pool: (N, KVH, bs, D);
+    block_table: (B, max_blocks) int32; kv_len: (B,) int32.
+
+    The block table and per-row lengths ride in as **scalar prefetch**
+    (``PrefetchScalarGridSpec``), so the K/V BlockSpec index maps read the
+    table *before* the kernel body runs: grid step (b, h, j) DMAs exactly
+    the slab block ``table[b, j]`` — the gather never materializes in HBM,
+    which is the whole point of the paged layout. GQA stays native via the
+    ``h // g`` index map, as in the prefill kernel. The same grid spec is
+    what the TPU dry-run roofline lowers; on CPU it runs in interpret mode
+    and is validated against ``paged_attention_ref``.
+    """
+    b, h, lq, d = q.shape
+    n, kvh, bs, _ = k_pool.shape
+    assert lq == 1, "paged kernel is single-token decode only"
+    assert h % kvh == 0
+    g = h // kvh
+    nb = block_table.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=float(scale), block_size=bs,
+        num_blocks=nb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda b_, h_, j, tbl, kvl: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, j, tbl, kvl: (tbl[b_, j],
+                                                      h_ // g, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h_, j, tbl, kvl: (tbl[b_, j],
+                                                      h_ // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda b_, h_, j, tbl, kvl: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, lq, d), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_table, jnp.int32), jnp.asarray(kv_len, jnp.int32),
+      q, k_pool, v_pool)
+
+
 def flash_attention_fwd(q, k, v, *, causal: bool = True,
                         scale: float | None = None,
                         kv_len: int | None = None, q_offset: int = 0,

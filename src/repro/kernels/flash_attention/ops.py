@@ -18,8 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import flash_attention_fwd
-from .ref import attention_ref, attention_blocked
+from .kernel import flash_attention_fwd, paged_decode_attention_fwd
+from .ref import attention_ref, attention_blocked, paged_attention_ref
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
@@ -78,3 +78,27 @@ def flash_attention(q, k, v, *, causal: bool = True,
                                  unroll=unroll)
     return _flash_pallas(q, k, v, causal, float(scale), kv_len, q_offset,
                          impl == "interpret")
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, kv_len, *,
+                           scale: float | None = None, impl: str = "ref"):
+    """Block-sparse decode attention through a paged KV pool.
+
+    q: (B, H, 1, D); k_pool/v_pool: (N, KVH, bs, D);
+    block_table: (B, max_blocks) int32; kv_len: (B,) int32 per-row valid
+    length (the query sits at ``kv_len - 1``).
+
+    ``impl="ref"``/``"blocked"`` gather through the table and run the
+    per-row oracle — bit-equal to the dense decode path by construction.
+    ``"interpret"``/``"pallas"`` run the Pallas kernel, which tiles over
+    blocks via scalar-prefetched index maps and never materializes the
+    gather. Forward-only (decode never differentiates).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if impl in ("pallas", "interpret"):
+        return paged_decode_attention_fwd(
+            q, k_pool, v_pool, block_table, kv_len, scale=float(scale),
+            interpret=impl == "interpret")
+    return paged_attention_ref(q, k_pool, v_pool, block_table, kv_len,
+                               scale=scale)

@@ -86,6 +86,37 @@ def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None,
     return jnp.einsum("bhql,bhld->bhqd", p, vf).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_table, kv_len, *,
+                        scale: float | None = None):
+    """Block-sparse decode-attention oracle over a paged KV pool.
+
+    q: (B, H, 1, D) — single-token decode queries.
+    k_pool, v_pool: (N, KVH, bs, D) — the shared block slab (N blocks of
+    ``bs`` positions each; block 0 is the trash block).
+    block_table: (B, max_blocks) int32 — absolute position ``p`` of row
+    ``b`` lives at ``k_pool[block_table[b, p // bs], :, p % bs]``;
+    unallocated entries are 0 (trash) and masked by ``kv_len``.
+    kv_len: (B,) int32 — valid cache length per row (query position is
+    ``kv_len - 1``).
+
+    Bit-equal to the dense per-row path by construction: the gather
+    reconstructs a ``(B, KVH, max_blocks * bs, D)`` layout whose live
+    positions hold exactly the bytes the dense cache holds, then calls the
+    same ``attention_ref`` with the same per-row masks — masked (trash or
+    stale) positions contribute an exact 0.0 either way.
+    """
+    b, h, lq, d = q.shape
+    n, kvh, bs, _ = k_pool.shape
+    nb = block_table.shape[1]
+    gk = k_pool[block_table]                  # (B, nb, KVH, bs, D)
+    gv = v_pool[block_table]
+    gk = gk.transpose(0, 2, 1, 3, 4).reshape(b, kvh, nb * bs, d)
+    gv = gv.transpose(0, 2, 1, 3, 4).reshape(b, kvh, nb * bs, d)
+    kvl = jnp.asarray(kv_len, jnp.int32)
+    return attention_ref(q, gk, gv, causal=True, scale=scale,
+                         kv_len=kvl, q_offset=kvl - lq)
+
+
 def attention_blocked(q, k, v, *, causal: bool = True,
                       scale: float | None = None, kv_len: int | None = None,
                       q_offset: int = 0, block_k: int = 1024,

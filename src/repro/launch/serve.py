@@ -42,6 +42,11 @@ def main():
                          "continuous-batching scheduler")
     ap.add_argument("--requests", type=int, default=0,
                     help="stream size for --continuous (default 3x batch)")
+    ap.add_argument("--paged", action="store_true",
+                    help="with --continuous: paged KV cache (fixed-size "
+                         "blocks shared across slots)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block for --paged")
     args = ap.parse_args()
 
     import jax
@@ -87,7 +92,8 @@ def main():
         sched = ContinuousScheduler(api, params, SchedulerConfig(
             batch=args.batch, buckets=(16, 32, 64),
             max_new_tokens=args.max_new_tokens,
-            temperature=args.temperature), metrics=metrics)
+            temperature=args.temperature, paged=args.paged,
+            block_size=args.block_size), metrics=metrics)
         rng = np.random.default_rng(0)
         rids = []
         for i in range(n_req):
@@ -105,6 +111,10 @@ def main():
         print("served {requests} requests, {tokens} tokens, "
               "{tokens_per_sec:.1f} tok/s, p50 latency {p50_latency_s:.3f}s,"
               " p99 {p99_latency_s:.3f}s".format(**summ))
+        if summ["kv_total_blocks"]:
+            print("kv slab: peak {kv_live_blocks_peak}/{kv_total_blocks} "
+                  "blocks live ({kv_util_peak:.0%}), peak resident "
+                  "{kv_peak_resident_bytes} bytes".format(**summ))
         print(f"jit traces: {dict(sched.trace_counts)} "
               f"(prefills={sched.prefills}, decode_steps="
               f"{sched.decode_steps})")
@@ -115,7 +125,8 @@ def main():
               "falling back to the fixed-batch server")
     prompts = pipe.batch_at(0, 0)["tokens"][: args.batch, :32]
     srv = Server(api, params, ServeConfig(
-        max_new_tokens=args.max_new_tokens, temperature=args.temperature))
+        max_new_tokens=args.max_new_tokens, temperature=args.temperature,
+        paged=args.paged, block_size=args.block_size))
     gen = srv.generate(prompts)
     for i in range(args.batch):
         names = _decode_names(gen[i], d, NUM_SPECIALS)

@@ -15,7 +15,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..kernels.flash_attention.ops import flash_attention
+from ..kernels.flash_attention.ops import flash_attention, \
+    paged_decode_attention
 from .config import ModelConfig
 from ..dist.sharding import ShardingRules, constrain
 
@@ -155,6 +156,14 @@ def kv_cache_axes():
                 v=("layers", "batch", "kv_heads", "cache_seq", "head_dim"))
 
 
+def paged_kv_cache_axes():
+    """Logical axes of the paged block slab (serve/paged.BlockPool): the
+    blocks dim replaces (batch, cache_seq) and stays unsharded — any block
+    may belong to any request, so only kv_heads carries model parallelism."""
+    return dict(k=("layers", None, "kv_heads", None, "head_dim"),
+                v=("layers", None, "kv_heads", None, "head_dim"))
+
+
 def decode_positions(index, s: int):
     """Absolute positions for ``s`` tokens starting at ``index``.
 
@@ -199,6 +208,15 @@ def apply_attention(x, p, cfg: ModelConfig, rules: ShardingRules, *,
     array of per-row lengths — the continuous-batching decode path, where
     each slot writes its new K/V at its own position and masks keys past
     its own length (S must be 1 in that case).
+
+    **Paged layout**: when ``cache`` carries a ``"table"`` key, k/v are the
+    *shared block slab* ``(N, KVH, block_size, Dh)`` and ``table`` is the
+    per-row ``(B, max_blocks)`` int32 block table — position ``p`` of row
+    ``b`` lives at ``slab[table[b, p // bs], :, p % bs]``. The new token's
+    K/V scatters into ``table[row, pos // bs]`` and attention gathers
+    block-sparsely through the table. Decode-only: requires S == 1,
+    per-row ``cache_index``, and self-attention (ssm/hybrid/encdec/vlm
+    state layouts are rejected by the scheduler before reaching here).
     """
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
@@ -234,6 +252,29 @@ def apply_attention(x, p, cfg: ModelConfig, rules: ShardingRules, *,
         v = constrain(v, rules, "batch", None, "kv_heads", None)
         kh = k.transpose(0, 2, 1, 3)
         vh = v.transpose(0, 2, 1, 3)
+
+    if cache is not None and "table" in cache:
+        if kv_src is not None or kv_precomputed is not None:
+            raise ValueError("paged KV cache supports self-attention only; "
+                             "cross-attention layouts keep the dense cache")
+        if s != 1 or jnp.ndim(cache_index) != 1:
+            raise ValueError(
+                "paged KV cache is per-row single-token decode only "
+                f"(got S={s}, cache_index ndim={jnp.ndim(cache_index)})")
+        table = cache["table"]
+        bs_blk = cache["k"].shape[2]
+        idx = jnp.asarray(cache_index, jnp.int32)
+        rows = jnp.arange(b)
+        blk = table[rows, idx // bs_blk]
+        off = idx % bs_blk
+        ck = cache["k"].at[blk, :, off].set(kh[:, :, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[blk, :, off].set(vh[:, :, 0].astype(cache["v"].dtype))
+        new_cache = dict(k=ck, v=cv, table=table)
+        out = paged_decode_attention(qh, ck, cv, table, idx + 1,
+                                     impl=cfg.attn_impl)
+        out = out.transpose(0, 2, 1, 3)  # (B, S, H, Dh)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(_dtype(cfg)))
+        return y, new_cache
 
     kv_len = None
     q_offset = 0

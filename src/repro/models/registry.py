@@ -17,6 +17,12 @@ Serving contract (the continuous-batching decode path):
     or a per-row (B,) array of absolute positions; the per-row form writes
     each row's K/V at its own cache slot and masks keys past its own
     length.
+  * **Paged KV** (dense/moe only): when the decode state carries a
+    ``"table"`` key, k/v are the shared block slab and attention routes
+    through the block-sparse paged path (``serve/paged.py``); the table is
+    passed through unchanged. ssm/hybrid (recurrent state) and encdec/vlm
+    (cross-attention cache stacks) keep their own layouts — the scheduler
+    rejects them for paged mode.
 """
 from __future__ import annotations
 

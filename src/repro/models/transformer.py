@@ -123,16 +123,25 @@ def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
                 x, _ = body(x, bp)
         new_cache = None
     else:
+        # paged layout: the (B, max_blocks) block table is shared by every
+        # layer, so it rides the scan as a closure capture, not a scanned leaf
+        table = cache.get("table")
+
         def body(carry, inp):
             bp, ck, cv = inp
+            layer_cache = dict(k=ck, v=cv)
+            if table is not None:
+                layer_cache["table"] = table
             y, nc = _apply_block(carry, bp, cfg, rules, positions=positions,
-                                 cache=dict(k=ck, v=cv),
+                                 cache=layer_cache,
                                  cache_index=cache_index, mesh=mesh)
             return y, (nc["k"], nc["v"])
         x, (nk, nv) = L.scan_or_unroll(body, x, (params["blocks"],
                                                  cache["k"], cache["v"]),
                                        cfg.scan_layers)
         new_cache = dict(k=nk, v=nv)
+        if table is not None:
+            new_cache["table"] = table
 
     x = L.apply_norm(x, params["ln_f"], cfg)
     return x, new_cache

@@ -8,12 +8,17 @@
   prefill buckets, decode the whole slot table with per-row positions,
   evict on EOS/budget and backfill without recompiling.
 * ``metrics`` — ``ServeMetrics``: submit/admit/first-token/finish
-  timestamps, tokens/sec and p50/p99 latency + TTFT.
+  timestamps, tokens/sec and p50/p99 latency + TTFT, plus KV-slab
+  utilization (live blocks / total) and peak-resident bytes.
+* ``paged`` — ``BlockPool``: the paged-KV block slab + free-list
+  allocator (``SchedulerConfig.paged``); long and short requests share
+  fixed blocks instead of per-slot ``max_cache_len`` stripes.
 """
 from .serve_loop import Server, ServeConfig, prompt_lengths
 from .scheduler import ContinuousScheduler, SchedulerConfig, Request
 from .metrics import ServeMetrics
+from .paged import BlockPool, blocks_for
 
 __all__ = ["Server", "ServeConfig", "prompt_lengths",
            "ContinuousScheduler", "SchedulerConfig", "Request",
-           "ServeMetrics"]
+           "ServeMetrics", "BlockPool", "blocks_for"]

@@ -38,9 +38,25 @@ def _percentile(xs: list[float], q: float) -> float:
 class ServeMetrics:
     clock: callable = time.perf_counter
     requests: dict[int, RequestTiming] = field(default_factory=dict)
+    # KV-slab occupancy, sampled once per scheduler step. "Blocks" are the
+    # paged pool's fixed blocks, or whole slot stripes on the dense path.
+    kv_total_blocks: int = 0
+    kv_live_blocks: int = 0          # last sample
+    kv_live_blocks_peak: int = 0
+    kv_block_bytes: int = 0
 
     def _rec(self, rid: int) -> RequestTiming:
         return self.requests.setdefault(rid, RequestTiming())
+
+    def record_kv_usage(self, live_blocks: int, total_blocks: int,
+                        block_bytes: int) -> None:
+        """One occupancy sample: ``live_blocks`` of ``total_blocks`` are
+        allocated to in-flight requests, each ``block_bytes`` on device."""
+        self.kv_live_blocks = int(live_blocks)
+        self.kv_total_blocks = int(total_blocks)
+        self.kv_block_bytes = int(block_bytes)
+        self.kv_live_blocks_peak = max(self.kv_live_blocks_peak,
+                                       int(live_blocks))
 
     def record_submit(self, rid: int, prompt_len: int = 0) -> None:
         r = self._rec(rid)
@@ -59,13 +75,25 @@ class ServeMetrics:
     def record_finish(self, rid: int) -> None:
         self._rec(rid).finish = self.clock()
 
+    def _kv_summary(self) -> dict:
+        util = (self.kv_live_blocks_peak / self.kv_total_blocks
+                if self.kv_total_blocks else 0.0)
+        return dict(
+            kv_util_peak=util,
+            kv_live_blocks_peak=self.kv_live_blocks_peak,
+            kv_total_blocks=self.kv_total_blocks,
+            kv_peak_resident_bytes=self.kv_live_blocks_peak
+            * self.kv_block_bytes,
+        )
+
     def summary(self) -> dict:
         done = [r for r in self.requests.values() if r.finish is not None]
         total_tokens = sum(r.tokens for r in self.requests.values())
         if not done:
             return dict(requests=0, tokens=total_tokens,
                         tokens_per_sec=0.0, p50_latency_s=0.0,
-                        p99_latency_s=0.0, p50_ttft_s=0.0, p99_ttft_s=0.0)
+                        p99_latency_s=0.0, p50_ttft_s=0.0, p99_ttft_s=0.0,
+                        **self._kv_summary())
         t0 = min(r.submit for r in done if r.submit is not None)
         t1 = max(r.finish for r in done)
         wall = max(t1 - t0, 1e-9)
@@ -84,4 +112,5 @@ class ServeMetrics:
             p99_latency_s=_percentile(lat, 99),
             p50_ttft_s=_percentile(ttft, 50),
             p99_ttft_s=_percentile(ttft, 99),
+            **self._kv_summary(),
         )

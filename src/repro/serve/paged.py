@@ -1,0 +1,165 @@
+"""Paged KV-cache block pool: fixed-size blocks shared across requests.
+
+The dense slot table reserves a full ``max_cache_len`` K/V stripe per row,
+so a 30-token request pins the same slab bytes as a 2000-token one — the
+serving-side analogue of scanning raw logs when a compact session summary
+would do. The paged pool is the fix the paper applies to storage and
+Loginson applies to collection: **fixed-size buffer management**. One slab
+of ``num_blocks`` fixed ``block_size``-token blocks serves every request;
+a request holds only the blocks its positions actually reach, so slab
+memory converts directly into admission capacity.
+
+Layout and invariants:
+
+* The slab is ``(num_layers, num_blocks + 1, kv_heads, block_size,
+  head_dim)`` per K and V. **Block 0 is the trash block**: it is never
+  allocated, every cleared block-table entry points at it, and the
+  scheduler's garbage writes for inactive rows land there — a freed block
+  can be handed to a new request the same step without any risk that a
+  dead row still scribbles on it.
+* Allocation is a LIFO free list — O(1) ``take`` / O(k) ``free`` of k
+  blocks, no search, no compaction. Blocks are interchangeable, so there
+  is no external fragmentation by construction: any free block serves any
+  request (the mixed-length evict/reuse test pins this down).
+* Admission **reserves** a request's worst case up front
+  (``blocks_needed`` = ceil((prompt_len + budget - 1) / block_size)) but
+  **allocates lazily**: the prompt's blocks at admission, then one block
+  at a time as decode crosses each block boundary. Reservation makes
+  mid-decode exhaustion impossible (no preemption machinery needed) while
+  the lazy table growth keeps ``live_blocks`` — and the utilization
+  metric — honest about what is actually written.
+* A per-request **block table** is padded to ``max_blocks`` entries
+  (``max_cache_len / block_size``); unallocated entries are 0 (trash), so
+  gathering through the table always reads in-bounds memory and per-row
+  ``kv_len`` masking makes the trash contribution exactly zero.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+
+def blocks_for(positions: int, block_size: int) -> int:
+    """Blocks needed to hold cache positions ``0..positions-1``."""
+    return max(0, -(-int(positions) // int(block_size)))
+
+
+class BlockPool:
+    """Free-list allocator over a fixed slab of KV blocks.
+
+    ``num_blocks`` counts *allocatable* blocks; the slab carries one extra
+    row (block 0, the trash block) that is never handed out. Reservations
+    (``reserve``/``cancel``) set aside capacity without choosing blocks;
+    ``take`` converts one reserved unit into a concrete block id.
+    """
+
+    def __init__(self, *, num_blocks: int, block_size: int,
+                 num_kv_heads: int, head_dim: int, num_layers: int,
+                 dtype=jnp.bfloat16):
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self.num_kv_heads = int(num_kv_heads)
+        self.head_dim = int(head_dim)
+        self.num_layers = int(num_layers)
+        self.dtype = jnp.dtype(dtype)
+        # LIFO free list: freshly freed blocks are reused first (warm HBM).
+        self._free: list[int] = list(range(self.num_blocks, 0, -1))
+        self._reserved = 0
+
+    @classmethod
+    def for_model(cls, cfg: ModelConfig, *, num_blocks: int,
+                  block_size: int) -> "BlockPool":
+        return cls(num_blocks=num_blocks, block_size=block_size,
+                   num_kv_heads=cfg.num_kv_heads,
+                   head_dim=cfg.resolved_head_dim,
+                   num_layers=cfg.num_layers, dtype=jnp.dtype(cfg.dtype))
+
+    # -- capacity accounting ----------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        """Total allocatable blocks (the trash block excluded)."""
+        return self.num_blocks
+
+    @property
+    def available(self) -> int:
+        """Blocks a new reservation may still claim."""
+        return len(self._free) - self._reserved
+
+    @property
+    def live_blocks(self) -> int:
+        """Blocks currently allocated to requests (written or writable)."""
+        return self.num_blocks - len(self._free)
+
+    @property
+    def block_bytes(self) -> int:
+        """Device bytes of one block across all layers, K and V."""
+        return (2 * self.num_layers * self.num_kv_heads * self.block_size
+                * self.head_dim * self.dtype.itemsize)
+
+    @property
+    def slab_bytes(self) -> int:
+        """Resident bytes of the whole slab (trash block included)."""
+        return (self.num_blocks + 1) * self.block_bytes
+
+    def blocks_needed(self, prompt_len: int, budget: int) -> int:
+        """Worst-case blocks for a request: prefill writes positions
+        ``0..prompt_len-1`` and decode writes ``prompt_len..prompt_len +
+        budget - 2`` (the final sampled token is never cached)."""
+        return blocks_for(prompt_len + budget - 1, self.block_size)
+
+    # -- reservation + allocation -----------------------------------------
+
+    def can_reserve(self, n: int) -> bool:
+        return self.available >= n
+
+    def reserve(self, n: int) -> None:
+        if not self.can_reserve(n):
+            raise ValueError(
+                f"cannot reserve {n} blocks: {self.available} available "
+                f"({len(self._free)} free - {self._reserved} reserved)")
+        self._reserved += n
+
+    def cancel(self, n: int) -> None:
+        """Return ``n`` unused reservation units (eviction before the
+        request's worst case materialized)."""
+        if n < 0 or n > self._reserved:
+            raise ValueError(f"cancel({n}) with {self._reserved} reserved")
+        self._reserved -= n
+
+    def take(self) -> int:
+        """Convert one reserved unit into a concrete block id. O(1)."""
+        if self._reserved <= 0:
+            raise ValueError("take() without a reservation")
+        if not self._free:  # unreachable while reservations are honest
+            raise ValueError("free list empty with reservations outstanding")
+        self._reserved -= 1
+        return self._free.pop()
+
+    def free(self, block_ids) -> None:
+        """Return allocated blocks to the pool. O(k)."""
+        for blk in block_ids:
+            blk = int(blk)
+            if not 1 <= blk <= self.num_blocks:
+                raise ValueError(f"block id {blk} out of range")
+            self._free.append(blk)
+
+    # -- device slab -------------------------------------------------------
+
+    def init_slab(self) -> dict:
+        """Zeroed K/V slab: ``(L, num_blocks + 1, KVH, block_size, Dh)``.
+
+        Built on demand (the pool itself keeps no reference, so the
+        scheduler's functionally-updated copy is the only live one).
+        """
+        shape = (self.num_layers, self.num_blocks + 1, self.num_kv_heads,
+                 self.block_size, self.head_dim)
+        return dict(k=jnp.zeros(shape, self.dtype),
+                    v=jnp.zeros(shape, self.dtype))

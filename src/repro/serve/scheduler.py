@@ -27,6 +27,22 @@ length, one decode step, one row insert. ``trace_counts`` tracks actual
 retraces (a python-level counter bumped only when jit re-traces), which is
 what the no-recompilation-after-warmup test asserts.
 
+**Paged KV mode** (``SchedulerConfig.paged``): instead of every slot
+owning a dense ``max_cache_len`` K/V stripe, all requests share one slab
+of fixed ``block_size`` blocks (``serve/paged.BlockPool``). Admission is
+gated by **blocks available**, not just a free slot row: a request
+reserves its worst case (ceil((prompt_len + budget - 1) / block_size))
+up front — so decode can never strand mid-request — but blocks are
+*allocated* lazily: the prompt's blocks at admission, then one per block
+boundary as decode proceeds. Eviction returns the request's blocks to the
+pool immediately, so a short request no longer pins a long request's
+worth of slab and the same bytes admit several times more mixed-length
+requests (``benchmarks/serve_tput.py`` measures it). The decode state
+carries the ``(batch, max_blocks)`` block table; attention gathers
+through it (``kernels.flash_attention.paged_decode_attention``) bit-equal
+to the dense path. Dense/moe only — ssm/hybrid/encdec/vlm state layouts
+are rejected at construction.
+
 Sharding: with ``mesh`` given, params and the KV-cache slab are placed via
 ``repro.dist`` rules (``tree_shardings`` over the models' logical axes) and
 every device call runs under ``dist.compat.use_mesh`` — the same rules that
@@ -49,6 +65,7 @@ from ..dist.sharding import tree_shardings
 from ..models import layers as L
 from ..models.registry import ModelApi
 from .metrics import ServeMetrics
+from .paged import BlockPool, blocks_for
 
 
 @dataclass(frozen=True)
@@ -65,6 +82,12 @@ class SchedulerConfig:
     max_new_tokens: int = 32               # default per-request budget
     temperature: float = 0.0               # 0 = greedy
     seed: int = 0
+    # paged KV: share one slab of fixed blocks across all slots
+    paged: bool = False
+    block_size: int = 16                   # tokens per KV block
+    num_blocks: int | None = None          # allocatable blocks; default
+    #                                        batch * max_cache_len/block_size
+    #                                        (dense-equivalent capacity)
 
 
 class ContinuousScheduler:
@@ -74,6 +97,11 @@ class ContinuousScheduler:
     batch on axis 1 of every leaf (dense/moe) — exactly what the row
     insert relies on. SSM-state families need exact-length prompts and a
     different state layout; they stay on the batch ``Server`` path.
+
+    With ``cfg.paged`` the per-slot K/V stripes are replaced by a shared
+    ``BlockPool`` slab: admission is gated by blocks available, tables
+    grow lazily as decode crosses block boundaries, and eviction returns
+    blocks to the pool (see the module docstring and ``serve/paged.py``).
     """
 
     SUPPORTED_FAMILIES = ("dense", "moe")
@@ -99,6 +127,18 @@ class ContinuousScheduler:
         self.trace_counts = collections.Counter()
         self.decode_steps = 0
         self.prefills = 0
+
+        self.pool: BlockPool | None = None
+        if cfg.paged:
+            if api.cfg.max_cache_len % cfg.block_size != 0:
+                raise ValueError(
+                    f"block_size={cfg.block_size} must divide "
+                    f"max_cache_len={api.cfg.max_cache_len}")
+            self._max_blocks = api.cfg.max_cache_len // cfg.block_size
+            num_blocks = (cfg.batch * self._max_blocks
+                          if cfg.num_blocks is None else cfg.num_blocks)
+            self.pool = BlockPool.for_model(
+                api.cfg, num_blocks=num_blocks, block_size=cfg.block_size)
 
         if mesh is not None:
             params = jax.device_put(
@@ -133,9 +173,33 @@ class ContinuousScheduler:
                     c, r.astype(c.dtype), slot, axis=1),
                 state, row_state)
 
+        bs_blk = cfg.block_size
+
+        def paged_insert_fn(state, row_state, slot, ids):
+            """Scatter a prefilled row into the shared slab: K/V go to the
+            blocks in ``ids`` (bucket-covering; trailing ids may be 0 =
+            trash for all-pad blocks), any other state leaves (stub
+            counters etc.) keep the dense axis-1 row insert."""
+            nb = ids.shape[0]
+            out = dict(state)
+            for key in ("k", "v"):
+                slab, row = state[key], row_state[key]
+                lyr, _, kvh, _, hd = row.shape
+                blocks = row[:, 0, :, :nb * bs_blk, :].reshape(
+                    lyr, kvh, nb, bs_blk, hd).transpose(0, 2, 1, 3, 4)
+                out[key] = slab.at[:, ids].set(blocks.astype(slab.dtype))
+            for key in state:
+                if key in ("k", "v", "table"):
+                    continue
+                out[key] = jax.lax.dynamic_update_slice_in_dim(
+                    state[key], row_state[key].astype(state[key].dtype),
+                    slot, axis=1)
+            return out
+
         self._prefill = jax.jit(self._counted("prefill", prefill_fn))
         self._step = jax.jit(self._counted("decode", step_fn))
-        self._insert = jax.jit(self._counted("insert", insert_fn))
+        self._insert = jax.jit(self._counted(
+            "insert", paged_insert_fn if cfg.paged else insert_fn))
 
         # slot table (host-side bookkeeping)
         B = cfg.batch
@@ -145,6 +209,15 @@ class ContinuousScheduler:
         self._cur_tok = np.zeros(B, np.int32)
         self._emitted = np.zeros(B, np.int32)
         self._budget = np.zeros(B, np.int32)
+
+        # paged bookkeeping: per-slot allocated block ids, worst-case
+        # reservation, and the host copy of the (B, max_blocks) block table
+        # (entry 0 = trash block; rows are zeroed on eviction so dead-row
+        # garbage writes can never touch a reallocated block)
+        if cfg.paged:
+            self._blocks: list[list[int]] = [[] for _ in range(B)]
+            self._reserved = np.zeros(B, np.int32)
+            self._table = np.zeros((B, self._max_blocks), np.int32)
 
         self._pending: collections.deque[Request] = collections.deque()
         self._next_rid = 0
@@ -169,6 +242,8 @@ class ContinuousScheduler:
         """Zero decode state of the full-slot-table shape, via eval_shape
         (no wasted prefill compute, no extra compile)."""
         B, b0 = self.cfg.batch, self.cfg.buckets[0]
+        if self.cfg.paged:
+            return self._init_paged_state()
         shapes = jax.eval_shape(
             lambda p: self.api.prefill(p, dict(
                 tokens=jnp.zeros((B, b0), jnp.int32),
@@ -184,6 +259,38 @@ class ContinuousScheduler:
                 pass  # state tree doesn't match the plain KV layout
         return state
 
+    def _init_paged_state(self):
+        """Shared block slab + per-row block table, plus full-slot-table
+        copies of any non-KV state leaves the model's prefill returns
+        (shape probed on a single row via eval_shape)."""
+        B, b0 = self.cfg.batch, self.cfg.buckets[0]
+        shapes = jax.eval_shape(
+            lambda p: self.api.prefill(p, dict(
+                tokens=jnp.zeros((1, b0), jnp.int32),
+                lengths=jnp.ones((1,), jnp.int32)))[1],
+            self.params)
+        if not isinstance(shapes, dict) or not {"k", "v"} <= set(shapes):
+            raise ValueError(
+                "paged KV needs a dict(k, v) decode state; got "
+                f"{type(shapes).__name__} — this family keeps its dense "
+                "layout")
+        state = dict(self.pool.init_slab())
+        for key, a in shapes.items():
+            if key in ("k", "v"):
+                continue
+            state[key] = jnp.zeros((a.shape[0], B) + a.shape[2:], a.dtype)
+        state["table"] = jnp.asarray(self._table)
+        if self.mesh is not None:
+            try:
+                axes = dict(L.paged_kv_cache_axes(),
+                            **{k: None for k in state
+                               if k not in ("k", "v")})
+                state = jax.device_put(
+                    state, tree_shardings(axes, self.api.rules, self.mesh))
+            except ValueError:
+                pass
+        return state
+
     # -- public API --------------------------------------------------------
 
     def submit(self, tokens, max_new_tokens: int | None = None) -> int:
@@ -195,12 +302,22 @@ class ContinuousScheduler:
             raise ValueError(
                 f"prompt length {len(toks)} exceeds the largest bucket "
                 f"{max(self.cfg.buckets)}")
+        bucket = self._bucket_for(len(toks))
         budget = (self.cfg.max_new_tokens if max_new_tokens is None
                   else max_new_tokens)
         if len(toks) + budget - 1 > self.api.cfg.max_cache_len:
             raise ValueError(
-                f"prompt length {len(toks)} + budget {budget} overflows "
-                f"max_cache_len={self.api.cfg.max_cache_len}")
+                f"prompt length {len(toks)} (bucket {bucket}) + budget "
+                f"{budget} needs {len(toks) + budget - 1} cache positions "
+                f"and overflows max_cache_len={self.api.cfg.max_cache_len}")
+        if self.pool is not None:
+            need = self.pool.blocks_needed(len(toks), budget)
+            if need > self.pool.capacity:
+                raise ValueError(
+                    f"prompt length {len(toks)} (bucket {bucket}) + budget "
+                    f"{budget} requires {need} KV blocks of "
+                    f"{self.pool.block_size} tokens, but the pool holds "
+                    f"only {self.pool.capacity} blocks total")
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, tokens=toks, max_new_tokens=budget)
@@ -228,14 +345,25 @@ class ContinuousScheduler:
             self.metrics.record_finish(rid)
 
     def _admit(self) -> None:
-        """Backfill free slots from the queue (prefill + row insert)."""
+        """Backfill free slots from the queue (prefill + row insert).
+
+        Paged mode admits by **blocks available**, not just free rows: the
+        head request's worst case must be reservable, else admission stalls
+        (FIFO) until an eviction frees blocks. Reservation happens before
+        the insert; allocation is lazy (prompt blocks now, the rest as
+        decode crosses block boundaries in ``step``)."""
         free = np.flatnonzero(~self._active)
         fi = 0
         while self._pending and fi < len(free):
-            req = self._pending.popleft()
-            slot = int(free[fi])
+            req = self._pending[0]                  # peek: may not fit yet
             n = len(req.tokens)
             bucket = self._bucket_for(n)
+            if self.pool is not None:
+                need = self.pool.blocks_needed(n, req.max_new_tokens)
+                if not self.pool.can_reserve(need):
+                    break                           # wait for an eviction
+            self._pending.popleft()
+            slot = int(free[fi])
             toks = np.full((1, bucket), PAD_ID, np.int32)
             toks[0, :n] = req.tokens
             key = jax.random.fold_in(
@@ -254,9 +382,27 @@ class ContinuousScheduler:
             if t0 == EOS_ID or req.max_new_tokens <= 1:
                 self._finish(req.rid)      # done at admission: slot stays free
                 continue
-            with self._ctx():
-                self._state = self._insert(self._state, row_state,
-                                           jnp.int32(slot))
+            if self.pool is not None:
+                self.pool.reserve(need)
+                self._reserved[slot] = need
+                ids = [self.pool.take() for _ in range(blocks_for(
+                    n, self.cfg.block_size))]
+                self._blocks[slot] = ids
+                self._table[slot, :] = 0
+                self._table[slot, :len(ids)] = ids
+                # bucket-covering id vector for the insert: all-pad blocks
+                # past the prompt go to the trash block (id 0)
+                nb = blocks_for(bucket, self.cfg.block_size)
+                bucket_ids = np.zeros(nb, np.int32)
+                bucket_ids[:len(ids)] = ids
+                with self._ctx():
+                    self._state = self._insert(
+                        self._state, row_state, jnp.int32(slot),
+                        jnp.asarray(bucket_ids))
+            else:
+                with self._ctx():
+                    self._state = self._insert(self._state, row_state,
+                                               jnp.int32(slot))
             self._active[slot] = True
             self._slot_rid[slot] = req.rid
             self._pos[slot] = n
@@ -271,6 +417,18 @@ class ContinuousScheduler:
         self._admit()
         if not self._active.any():
             return {}
+        if self.pool is not None:
+            # lazy table growth: map a fresh block the moment a row's write
+            # position crosses into it (the admission reservation guarantees
+            # take() succeeds), then refresh the device table copy — same
+            # shape every step, so the jitted decode never retraces.
+            for slot in np.flatnonzero(self._active):
+                b_idx = int(self._pos[slot]) // self.cfg.block_size
+                if b_idx >= len(self._blocks[slot]):
+                    blk = self.pool.take()
+                    self._blocks[slot].append(blk)
+                    self._table[slot, b_idx] = blk
+            self._state["table"] = jnp.asarray(self._table)
         key = jax.random.fold_in(self._key, 2 * self._step_counter)
         self._step_counter += 1
         with self._ctx():
@@ -279,6 +437,23 @@ class ContinuousScheduler:
                 jnp.asarray(self._pos), jnp.asarray(self._active), key)
         self.decode_steps += 1
         nxt = np.asarray(nxt)
+        # sample KV occupancy before evictions return blocks: the peak
+        # must reflect what this decode actually held resident
+        if self.metrics is not None:
+            if self.pool is not None:
+                self.metrics.record_kv_usage(
+                    self.pool.live_blocks, self.pool.capacity,
+                    self.pool.block_bytes)
+            else:
+                # dense: every active slot pins one max_cache_len stripe
+                row_bytes = 0
+                if isinstance(self._state, dict) and \
+                        {"k", "v"} <= set(self._state):
+                    for leaf in (self._state["k"], self._state["v"]):
+                        row_bytes += (int(np.prod(leaf.shape))
+                                      // leaf.shape[1]) * leaf.dtype.itemsize
+                self.metrics.record_kv_usage(
+                    self.num_active, self.cfg.batch, row_bytes)
         emissions: dict[int, int] = {}
         for slot in np.flatnonzero(self._active):
             rid = int(self._slot_rid[slot])
@@ -293,6 +468,13 @@ class ContinuousScheduler:
                 self._finish(rid)
                 self._active[slot] = False     # evict; backfilled next admit
                 self._slot_rid[slot] = -1
+                if self.pool is not None:
+                    self.pool.free(self._blocks[slot])
+                    self.pool.cancel(
+                        int(self._reserved[slot]) - len(self._blocks[slot]))
+                    self._blocks[slot] = []
+                    self._reserved[slot] = 0
+                    self._table[slot, :] = 0   # dead-row writes -> trash
         self._cur_tok = nxt.astype(np.int32)
         self._admit()
         return emissions

@@ -33,6 +33,11 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0     # 0 = greedy
     seed: int = 0
+    # paged KV cache (dense/moe only): fixed-size blocks shared across
+    # slots instead of a max_cache_len stripe per row — see serve/paged.py
+    paged: bool = False
+    block_size: int = 16
+    num_blocks: int | None = None
 
 
 def prompt_lengths(prompts: np.ndarray) -> np.ndarray:
@@ -86,7 +91,10 @@ class Server:
                 SchedulerConfig(batch=batch, buckets=(bucket,),
                                 max_new_tokens=self.scfg.max_new_tokens,
                                 temperature=self.scfg.temperature,
-                                seed=self.scfg.seed),
+                                seed=self.scfg.seed,
+                                paged=self.scfg.paged,
+                                block_size=self.scfg.block_size,
+                                num_blocks=self.scfg.num_blocks),
                 mesh=self.mesh)
         return self._schedulers[key]
 
@@ -102,6 +110,11 @@ class Server:
         if extra is None and \
                 self.api.cfg.family in ContinuousScheduler.SUPPORTED_FAMILIES:
             return self._generate_continuous(prompts)
+        if self.scfg.paged:
+            raise ValueError(
+                f"paged KV serves {ContinuousScheduler.SUPPORTED_FAMILIES} "
+                f"only; family {self.api.cfg.family!r} keeps its own state "
+                "layout on the dense batch path")
         return self._generate_batch(prompts, extra)
 
     def _generate_continuous(self, prompts: np.ndarray):

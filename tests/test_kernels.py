@@ -5,8 +5,11 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref, attention_blocked
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               paged_decode_attention)
+from repro.kernels.flash_attention.ref import (attention_ref,
+                                               attention_blocked,
+                                               paged_attention_ref)
 from repro.kernels.funnel_match.ops import deepest_stage, reach_counts
 from repro.kernels.funnel_match.ref import (pack_match_bits,
                                             deepest_stage_oracle_np)
@@ -64,6 +67,65 @@ def test_blocked_equals_ref_many_blocks():
     blk = attention_blocked(q, k, v, causal=False, kv_len=300, block_k=64)
     np.testing.assert_allclose(np.asarray(blk), np.asarray(ref),
                                rtol=2e-5, atol=2e-5)
+
+
+def _paged_case(b, h, kvh, d, bs, nb, n_pool, seed=0):
+    """Random pool + per-row tables of distinct live blocks + lengths."""
+    rng = np.random.default_rng(seed)
+    kp = rng.standard_normal((n_pool, kvh, bs, d)).astype(np.float32)
+    vp = rng.standard_normal((n_pool, kvh, bs, d)).astype(np.float32)
+    q = rng.standard_normal((b, h, 1, d)).astype(np.float32)
+    table = np.zeros((b, nb), np.int32)
+    kv_len = np.zeros((b,), np.int32)
+    free = list(range(1, n_pool))         # block 0 = trash, stays unmapped
+    rng.shuffle(free)
+    for r in range(b):
+        kv_len[r] = rng.integers(1, nb * bs + 1)
+        for j in range((int(kv_len[r]) + bs - 1) // bs):
+            table[r, j] = free.pop()
+    return q, kp, vp, table, kv_len
+
+
+def test_paged_ref_bit_equal_to_dense_gather():
+    """The oracle over the paged layout is the dense per-row oracle on the
+    gathered cache — bitwise, not approximately."""
+    q, kp, vp, table, kv_len = _paged_case(3, 4, 2, 32, 8, 4, n_pool=16)
+    dk = np.stack([np.concatenate([kp[t] for t in row], axis=1)
+                   for row in table])
+    dv = np.stack([np.concatenate([vp[t] for t in row], axis=1)
+                   for row in table])
+    ref = attention_ref(jnp.asarray(q), jnp.asarray(dk), jnp.asarray(dv),
+                        causal=True, kv_len=jnp.asarray(kv_len),
+                        q_offset=jnp.asarray(kv_len - 1))
+    got = paged_attention_ref(jnp.asarray(q), jnp.asarray(kp),
+                              jnp.asarray(vp), jnp.asarray(table),
+                              jnp.asarray(kv_len))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("b,h,kvh,d,bs,nb", [
+    (2, 4, 4, 32, 8, 4),      # MHA
+    (3, 8, 2, 64, 16, 4),     # GQA 4:1
+    (1, 8, 1, 128, 8, 8),     # MQA, d=128
+])
+def test_paged_decode_kernel_interpret_matches_ref(b, h, kvh, d, bs, nb):
+    q, kp, vp, table, kv_len = _paged_case(b, h, kvh, d, bs, nb,
+                                           n_pool=b * nb + 2, seed=b)
+    ref = paged_decode_attention(q, kp, vp, table, kv_len, impl="ref")
+    pal = paged_decode_attention(q, kp, vp, table, kv_len, impl="interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_trash_block_contents_never_leak():
+    """Garbage in unmapped (trash) blocks must contribute exactly zero."""
+    q, kp, vp, table, kv_len = _paged_case(2, 4, 2, 32, 8, 4, n_pool=12)
+    before = paged_decode_attention(q, kp, vp, table, kv_len, impl="ref")
+    kp2, vp2 = kp.copy(), vp.copy()
+    kp2[0] = 1e6                          # poison the trash block
+    vp2[0] = -1e6
+    after = paged_decode_attention(q, kp2, vp2, table, kv_len, impl="ref")
+    np.testing.assert_array_equal(np.asarray(before), np.asarray(after))
 
 
 def test_flash_gradients_match_ref():

@@ -21,7 +21,8 @@ from repro.models.registry import get_model, ModelApi
 from repro.data.pipeline import PAD_ID, EOS_ID
 from repro.dist import make_host_mesh, REPLICATED
 from repro.serve import (Server, ServeConfig, ContinuousScheduler,
-                         SchedulerConfig, ServeMetrics, prompt_lengths)
+                         SchedulerConfig, ServeMetrics, prompt_lengths,
+                         BlockPool, blocks_for)
 
 VOCAB = 64
 
@@ -37,7 +38,9 @@ def dense():
 
 # ---------------------------------------------------------------------------
 # Stub model: next token = clip(prev + 1), EOS after `eos_after` decodes.
-# State leaves are (X, B, ...) so the scheduler's axis-1 row insert works.
+# State leaves are (X, B, ...) so the scheduler's axis-1 row insert works;
+# k/v are KV-cache-shaped so the paged block scatter works too, and
+# decode passes unknown state keys (the block table) through.
 # ---------------------------------------------------------------------------
 
 def _stub_api(eos_after: int = 3, family: str = "dense") -> ModelApi:
@@ -56,15 +59,15 @@ def _stub_api(eos_after: int = 3, family: str = "dense") -> ModelApi:
         else:
             li = jnp.asarray(lengths, jnp.int32)
             last, idx = toks[jnp.arange(bsz), li - 1], li
-        state = dict(kv=jnp.zeros((1, bsz, 1, cfg.max_cache_len, 1)),
+        state = dict(k=jnp.zeros((1, bsz, 1, cfg.max_cache_len, 1)),
+                     v=jnp.zeros((1, bsz, 1, cfg.max_cache_len, 1)),
                      gen=jnp.zeros((1, bsz), jnp.int32))
         return 10.0 * jax.nn.one_hot(_next(last), VOCAB), state, idx
 
     def decode_step(p, tok, state, idx):
         gen = state["gen"] + 1
         nxt = jnp.where(gen[0] >= eos_after, EOS_ID, _next(tok))
-        return 10.0 * jax.nn.one_hot(nxt, VOCAB), \
-            dict(kv=state["kv"], gen=gen)
+        return 10.0 * jax.nn.one_hot(nxt, VOCAB), dict(state, gen=gen)
 
     return ModelApi(cfg=cfg, rules=REPLICATED, mesh=None,
                     init=lambda key: {}, axes=lambda: {},
@@ -298,6 +301,236 @@ def test_scheduler_rejects_unsupported_family():
     api = _stub_api(family="ssm")
     with pytest.raises(ValueError, match="supports"):
         ContinuousScheduler(api, {}, SchedulerConfig(batch=2, buckets=(8,)))
+
+
+# ---------------------------------------------------------------------------
+# paged KV: block pool allocator
+# ---------------------------------------------------------------------------
+
+def _tiny_pool(num_blocks=6, block_size=4):
+    return BlockPool(num_blocks=num_blocks, block_size=block_size,
+                     num_kv_heads=1, head_dim=2, num_layers=1)
+
+
+def test_blocks_for():
+    assert blocks_for(0, 8) == 0
+    assert blocks_for(1, 8) == 1
+    assert blocks_for(8, 8) == 1
+    assert blocks_for(9, 8) == 2
+
+
+def test_block_pool_alloc_free_reuse_cycles():
+    pool = _tiny_pool(num_blocks=6)
+    assert (pool.capacity, pool.available, pool.live_blocks) == (6, 6, 0)
+    pool.reserve(4)
+    assert pool.available == 2            # reservation sets capacity aside
+    ids = [pool.take() for _ in range(4)]
+    assert len(set(ids)) == 4 and all(1 <= i <= 6 for i in ids)  # 0 = trash
+    assert (pool.available, pool.live_blocks) == (2, 4)
+    pool.free(ids[:2])
+    assert (pool.available, pool.live_blocks) == (4, 2)
+    pool.free(ids[2:])
+    # mixed-length alloc/free cycles always reach full capacity again:
+    # blocks are interchangeable, so there is no fragmentation to leak
+    for k in (6, 1, 5, 2, 6, 3):
+        pool.reserve(k)
+        got = [pool.take() for _ in range(k)]
+        assert len(set(got)) == k
+        pool.free(got)
+    assert (pool.available, pool.live_blocks) == (6, 0)
+
+
+def test_block_pool_reservation_guards():
+    pool = _tiny_pool(num_blocks=4)
+    with pytest.raises(ValueError, match="reserve"):
+        pool.reserve(5)
+    with pytest.raises(ValueError, match="reservation"):
+        pool.take()                        # take without a reservation
+    pool.reserve(2)
+    a = pool.take()
+    pool.cancel(1)                         # evicted before using block 2
+    assert pool.available == 3
+    pool.free([a])
+    assert pool.available == 4
+    with pytest.raises(ValueError, match="out of range"):
+        pool.free([0])                     # the trash block is never freed
+
+
+def test_block_pool_worst_case_accounting():
+    pool = _tiny_pool(block_size=8)
+    # prefill writes prompt_len, decode writes budget - 1 more positions
+    assert pool.blocks_needed(5, 6) == 2       # positions 0..9
+    assert pool.blocks_needed(8, 1) == 1       # budget 1: prompt only
+    assert pool.blocks_needed(8, 9) == 2       # positions 0..15
+    assert pool.blocks_needed(8, 10) == 3      # position 16 opens block 2
+
+
+# ---------------------------------------------------------------------------
+# paged KV: scheduler admission / lazy growth / eviction (stub machinery)
+# ---------------------------------------------------------------------------
+
+def test_paged_admission_blocked_at_exhaustion_then_unblocked():
+    eos_after = 99                             # run every request to budget
+    api = _stub_api(eos_after=eos_after)
+    # each request: prompt 5 + budget 6 -> 2 blocks of 8; a 3-block pool
+    # holds exactly one in flight even though the slot table has 4 rows
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=4, buckets=(8,), max_new_tokens=6,
+        paged=True, block_size=8, num_blocks=3))
+    prompts = [np.full(5, 7, np.int32) for _ in range(3)]
+    rids = [sched.submit(p) for p in prompts]
+    sched.step()
+    assert sched.num_active == 1               # admission gated by blocks,
+    assert sched.num_pending == 2              # not by the 4 free rows
+    max_active = 1
+    while sched.num_active or sched.num_pending:
+        sched.step()
+        max_active = max(max_active, sched.num_active)
+    outs = sched.run()
+    assert max_active == 1                     # pool exhaustion held
+    assert sched.pool.live_blocks == 0 and sched.pool.available == 3
+    for rid, p in zip(rids, prompts):
+        np.testing.assert_array_equal(outs[rid],
+                                      _stub_expected(p, 6, eos_after))
+
+
+def test_paged_lazy_block_growth():
+    api = _stub_api(eos_after=99)
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=1, buckets=(8,), max_new_tokens=10,
+        paged=True, block_size=4))
+    sched.submit(np.full(3, 7, np.int32))      # needs ceil(12/4) = 3 blocks
+    sched._admit()
+    assert len(sched._blocks[0]) == 1          # prompt fits one block
+    peak = 1
+    while sched.num_active:
+        sched.step()
+        if sched._active[0]:
+            peak = max(peak, len(sched._blocks[0]))
+    assert peak == 3                           # grew lazily to worst case
+    assert sched.pool.live_blocks == 0         # all freed on eviction
+
+
+def test_paged_dead_row_table_is_cleared():
+    api = _stub_api(eos_after=2)
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=6,
+        paged=True, block_size=8))
+    sched.submit(np.full(5, 7, np.int32))
+    sched.run()
+    assert (sched._table == 0).all()           # dead rows write to trash
+
+
+def test_paged_scheduler_decode_step_counts():
+    api = _stub_api(eos_after=99)
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=6,
+        paged=True, block_size=16))
+    sched.submit(np.full(5, 7, np.int32))
+    sched.run()
+    assert sched.decode_steps == 5             # same contract as dense
+
+
+def test_paged_scheduler_metrics_report_kv_usage():
+    api = _stub_api(eos_after=99)
+    m = ServeMetrics()
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=6,
+        paged=True, block_size=8, num_blocks=6), metrics=m)
+    for p in _rand_prompts(np.random.default_rng(7), 4, lo=3, hi=8):
+        sched.submit(p)
+    sched.run()
+    s = m.summary()
+    assert s["kv_total_blocks"] == 6
+    assert 0 < s["kv_live_blocks_peak"] <= 6
+    assert s["kv_util_peak"] == s["kv_live_blocks_peak"] / 6
+    assert s["kv_peak_resident_bytes"] == \
+        s["kv_live_blocks_peak"] * sched.pool.block_bytes
+
+
+def test_paged_rejects_bad_configs():
+    api = _stub_api()
+    with pytest.raises(ValueError, match="must divide"):
+        ContinuousScheduler(api, {}, SchedulerConfig(
+            batch=2, buckets=(8,), paged=True, block_size=7))
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=4,
+        paged=True, block_size=8, num_blocks=2))
+    # capacity error names the bucket and the blocks required
+    with pytest.raises(ValueError, match=r"bucket 8.*requires 4 KV blocks"):
+        sched.submit(np.full(8, 7, np.int32), max_new_tokens=20)
+    api_ssm = _stub_api(family="ssm")
+    with pytest.raises(ValueError, match="supports"):
+        ContinuousScheduler(api_ssm, {}, SchedulerConfig(
+            batch=2, buckets=(8,), paged=True))
+
+
+def test_paged_server_rejects_batch_path_families():
+    cfg = smoke_config("mamba2-370m").with_(vocab_size=VOCAB)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    srv = Server(api, params, ServeConfig(max_new_tokens=2, paged=True))
+    with pytest.raises(ValueError, match="paged KV serves"):
+        srv.generate(np.full((1, 5), 7, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# paged KV: bit-equality with the dense path (real model, host-local mesh)
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_dense_bit_equal_and_no_retrace(dense):
+    api, params = dense
+    mesh = make_host_mesh(1, 1)
+    rng = np.random.default_rng(8)
+    prompts = _rand_prompts(rng, 8, lo=3, hi=16)
+    dense_s = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=3, buckets=(8, 16), max_new_tokens=5), mesh=mesh)
+    paged_s = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=3, buckets=(8, 16), max_new_tokens=5,
+        paged=True, block_size=8), mesh=mesh)
+    rd = [dense_s.submit(p) for p in prompts]
+    rp = [paged_s.submit(p) for p in prompts]
+    outs_d, outs_p = dense_s.run(), paged_s.run()
+    for a, b, p in zip(rd, rp, prompts):
+        np.testing.assert_array_equal(outs_d[a], outs_p[b],
+                                      err_msg=str(p))
+    # zero retraces after warmup: a second stream hits the jit cache only
+    warm = dict(paged_s.trace_counts)
+    for p in _rand_prompts(rng, 6, lo=3, hi=16):
+        paged_s.submit(p)
+    paged_s.run()
+    assert dict(paged_s.trace_counts) == warm
+
+
+def test_paged_greedy_decode_deterministic(dense):
+    api, params = dense
+    srv = Server(api, params, ServeConfig(max_new_tokens=6, paged=True,
+                                          block_size=8))
+    rng = np.random.default_rng(9)
+    prompts = np.full((3, 12), PAD_ID, np.int32)
+    for i, l in enumerate((12, 7, 4)):
+        prompts[i, :l] = rng.integers(4, VOCAB, l)
+    g1 = srv.generate(prompts)
+    g2 = srv.generate(prompts)
+    assert g1.shape == (3, 6)
+    assert np.array_equal(g1, g2)
+
+
+def test_paged_padded_prompt_decodes_bit_equal_to_trimmed(dense):
+    api, params = dense
+    srv = Server(api, params, ServeConfig(max_new_tokens=6, paged=True,
+                                          block_size=8))
+    plain = Server(api, params, ServeConfig(max_new_tokens=6))
+    rng = np.random.default_rng(10)
+    for l in (3, 5, 9):
+        prompts = np.full((2, 12), PAD_ID, np.int32)
+        prompts[0] = rng.integers(4, VOCAB, 12)
+        prompts[1, :l] = rng.integers(4, VOCAB, l)
+        padded = srv.generate(prompts)
+        trimmed = srv.generate(prompts[1:2, :l])
+        assert np.array_equal(padded[1], trimmed[0]), l
+        # and the paged Server agrees with the dense one bit-for-bit
+        assert np.array_equal(padded, plain.generate(prompts)), l
 
 
 def test_scheduler_rejects_oversized_prompt_and_cache():
