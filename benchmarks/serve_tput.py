@@ -1,4 +1,5 @@
-"""Serving throughput and latency: fixed single-batch vs continuous vs paged.
+"""Serving throughput and latency: fixed single-batch vs continuous vs
+paged, plus per-family continuous-batching rows.
 
 The same request stream (3x slot-count requests, variable prompt lengths,
 all queued at t=0) served two ways over the same smoke behaviour LM:
@@ -15,8 +16,14 @@ stream served by the dense slot table (every row pins a ``max_cache_len``
 stripe) vs the paged scheduler (the same bytes as fixed blocks shared by
 many more rows). ``serve_dense`` / ``serve_paged`` rows report tokens/sec,
 slab bytes, and the number of concurrently admitted requests; the paged
-row must admit >= 2x the dense row (asserted). With ``run.py --json`` the
-same numbers land machine-readably in ``BENCH_serve.json``.
+row must admit >= 2x the dense row (asserted).
+
+Finally the **DecodeState family rows**: ``serve_ssm`` (recurrent rows)
+and ``serve_encdec`` (cross-attention stacks with per-request frame
+extras) drive the same scheduler machinery end to end — zero retraces
+asserted — proving continuous batching is family-agnostic, not a dense
+special case. With ``run.py --json`` everything lands machine-readably in
+``BENCH_serve.json`` (the family rows under ``families``).
 
 Rows report tokens/sec plus the p50/p99 per-request latency derived from
 the t=0 queue-arrival model.
@@ -71,7 +78,7 @@ def run() -> list[str]:
             prompts = np.full((len(g), bucket), PAD_ID, np.int32)
             for j, r in enumerate(g):
                 prompts[j, :len(r)] = r
-            out = srv._generate_batch(prompts, None)   # the fixed recipe
+            out = srv.generate_batch(prompts)          # the fixed recipe
             tokens += out.size
             if record is not None:
                 record += [time.perf_counter() - t_start] * len(g)
@@ -179,8 +186,62 @@ def run() -> list[str]:
             f"util={ps['kv_util_peak']:.0%} 0 retraces"),
     ]
 
+    # -- DecodeState family rows: the same scheduler over non-dense state -
+    def family_stream(arch, seed):
+        fcfg = smoke_config(arch).with_(vocab_size=64, max_cache_len=64)
+        fapi = get_model(fcfg)
+        fparams = fapi.init(jax.random.PRNGKey(0))
+        frng = np.random.default_rng(seed)
+
+        def extra():
+            if fcfg.family == "encdec":
+                return dict(frames=frng.standard_normal(
+                    (fcfg.n_frames, fcfg.d_model)).astype(np.float32))
+            if fcfg.family == "vlm":
+                return dict(patches=frng.standard_normal(
+                    (fcfg.n_patches, fcfg.vision_dim)).astype(np.float32))
+            return None
+
+        fsched = ContinuousScheduler(fapi, fparams, SchedulerConfig(
+            batch=batch, buckets=(bucket,), max_new_tokens=max_new))
+        freqs = _requests(n_req, bucket, seed=seed)
+        for r in freqs:                              # warmup stream
+            fsched.submit(r, extra=extra())
+        fsched.run()
+        warm = dict(fsched.trace_counts)
+        fmetrics = ServeMetrics()
+        fsched.metrics = fmetrics
+        for r in freqs:
+            fsched.submit(r, extra=extra())
+        fsched.run()
+        assert dict(fsched.trace_counts) == warm, \
+            f"{arch} scheduler recompiled after warmup"
+        fs = fmetrics.summary()
+        flat = [t.finish - t.submit for t in fmetrics.requests.values()
+                if t.finish is not None and t.submit is not None]
+        return fs, flat
+
+    families_json = {}
+    for name, arch in (("serve_ssm", "mamba2-370m"),
+                       ("serve_encdec", "whisper-tiny")):
+        fs, flat = family_stream(arch, seed=3)
+        rows.append(row(
+            name, (fs['tokens'] / fs['tokens_per_sec']) * 1e6
+            if fs['tokens_per_sec'] else 0.0,
+            f"{fs['tokens_per_sec']:.1f} tok/s "
+            f"p50={_pct(flat, 50) * 1e3:.0f}ms "
+            f"p99={_pct(flat, 99) * 1e3:.0f}ms "
+            f"{fs['requests']} reqs slots={batch} 0 retraces"))
+        families_json[name] = dict(
+            arch=arch, requests=fs["requests"], tokens=fs["tokens"],
+            tokens_per_sec=fs["tokens_per_sec"],
+            p50_latency_s=fs["p50_latency_s"],
+            p99_latency_s=fs["p99_latency_s"],
+            peak_resident_bytes=fs["kv_peak_resident_bytes"])
+
     global LAST_JSON
     LAST_JSON = dict(
+        families=families_json,
         stream=dict(requests=n_short, prompt_len="4..8", budget=budget,
                     model="behavior-lm-100m-smoke",
                     max_cache_len=cfg.max_cache_len),

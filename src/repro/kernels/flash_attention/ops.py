@@ -63,7 +63,11 @@ def flash_attention(q, k, v, *, causal: bool = True,
     per_row = (kv_len is not None and jnp.ndim(kv_len) >= 1) or \
         jnp.ndim(q_offset) >= 1
     if per_row:
-        assert q.shape[2] == 1, "per-row kv_len/q_offset is decode-only"
+        if q.shape[2] != 1:
+            raise ValueError(
+                "per-row kv_len/q_offset is single-token decode only "
+                f"(got Lq={q.shape[2]}); ragged prefill uses scalar "
+                "kv_len with per-row logit reads instead")
         return attention_ref(q, k, v, causal=causal, scale=scale,
                              kv_len=kv_len, q_offset=q_offset)
     if impl == "ref":
@@ -76,6 +80,10 @@ def flash_attention(q, k, v, *, causal: bool = True,
         return attention_blocked(q, k, v, causal=causal, scale=scale,
                                  kv_len=kv_len, q_offset=q_offset,
                                  unroll=unroll)
+    if impl not in ("pallas", "interpret"):
+        raise ValueError(
+            f"unknown flash-attention impl {impl!r}; expected "
+            "'ref' | 'blocked' | 'interpret' | 'pallas'")
     return _flash_pallas(q, k, v, causal, float(scale), kv_len, q_offset,
                          impl == "interpret")
 
@@ -96,9 +104,18 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, kv_len, *,
     """
     if scale is None:
         scale = q.shape[-1] ** -0.5
+    if q.shape[2] != 1 or block_table.ndim != 2 or jnp.ndim(kv_len) != 1:
+        raise ValueError(
+            "paged decode attention is per-row single-token only: "
+            f"got Lq={q.shape[2]}, table ndim={block_table.ndim}, "
+            f"kv_len ndim={jnp.ndim(kv_len)}")
     if impl in ("pallas", "interpret"):
         return paged_decode_attention_fwd(
             q, k_pool, v_pool, block_table, kv_len, scale=float(scale),
             interpret=impl == "interpret")
+    if impl not in ("ref", "blocked"):
+        raise ValueError(
+            f"unknown paged-attention impl {impl!r}; expected "
+            "'ref' | 'blocked' | 'interpret' | 'pallas'")
     return paged_attention_ref(q, k_pool, v_pool, block_table, kv_len,
                                scale=scale)

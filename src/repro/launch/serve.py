@@ -1,11 +1,17 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
 Restores the newest checkpoint (if any) and serves batched next-event
-predictions over session prefixes drawn from the live pipeline. With
-``--continuous`` the prefixes are served as an open-ended request stream
-(variable prompt lengths, > 3x the slot count) through the
-continuous-batching scheduler, and the latency/throughput summary is
-printed afterwards.
+predictions over session prefixes drawn from the live pipeline. The
+default (and ``--continuous``) path serves the prefixes as an open-ended
+request stream (variable prompt lengths, > 3x the slot count) through the
+continuous-batching scheduler — **every registry family**, including
+ssm/hybrid (recurrent rows) and encdec/vlm (per-request frames/patches
+extras) — and prints the latency/throughput summary afterwards.
+
+``--batch`` opts into the fixed-batch ``Server.generate_batch`` oracle
+path explicitly (one lockstep rectangle, no admission/eviction) — the
+silent family downgrade it used to hide is gone; unknown families now
+fail loudly at scheduler construction.
 """
 from __future__ import annotations
 
@@ -29,6 +35,18 @@ def _decode_names(tokens, d, num_specials: int):
     return names
 
 
+def _request_extras(cfg, rng):
+    """Per-request encoder inputs for the stubbed frontends (the live
+    pipeline carries tokens only): random frame/patch embeddings."""
+    if cfg.family == "encdec":
+        return dict(frames=rng.standard_normal(
+            (cfg.n_frames, cfg.d_model)).astype(np.float32))
+    if cfg.family == "vlm":
+        return dict(patches=rng.standard_normal(
+            (cfg.n_patches, cfg.vision_dim)).astype(np.float32))
+    return None
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="behavior-lm-100m")
@@ -36,18 +54,27 @@ def main():
     ap.add_argument("--ckpt", default="/tmp/repro_train_ckpt")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="slot-table rows (continuous) / rectangle rows "
+                         "(--batch)")
     ap.add_argument("--continuous", action="store_true",
                     help="serve a request stream through the "
-                         "continuous-batching scheduler")
+                         "continuous-batching scheduler (the default; "
+                         "kept as an explicit flag)")
+    ap.add_argument("--batch", action="store_true",
+                    help="opt into the fixed-batch Server.generate_batch "
+                         "oracle path instead of the scheduler")
     ap.add_argument("--requests", type=int, default=0,
-                    help="stream size for --continuous (default 3x batch)")
+                    help="stream size for the continuous path "
+                         "(default 3x slots)")
     ap.add_argument("--paged", action="store_true",
-                    help="with --continuous: paged KV cache (fixed-size "
-                         "blocks shared across slots)")
+                    help="paged KV cache (fixed-size blocks shared across "
+                         "slots; caps.paged families)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block for --paged")
     args = ap.parse_args()
+    if args.batch and args.continuous:
+        ap.error("--batch and --continuous are mutually exclusive")
 
     import jax
     from ..configs import full_config, smoke_config
@@ -82,56 +109,60 @@ def main():
     else:
         print("no checkpoint found — serving untrained weights")
 
+    slots = max(args.slots, 1)
     pipe = SessionBatchPipeline(seqs, PipelineConfig(
-        seq_len=64, global_batch=max(args.batch, 1)))
+        seq_len=64, global_batch=slots))
+    rng = np.random.default_rng(0)
 
-    if args.continuous and cfg.family in \
-            ContinuousScheduler.SUPPORTED_FAMILIES:
-        n_req = args.requests or 3 * args.batch
-        metrics = ServeMetrics()
-        sched = ContinuousScheduler(api, params, SchedulerConfig(
-            batch=args.batch, buckets=(16, 32, 64),
+    if args.batch:
+        prompts = pipe.batch_at(0, 0)["tokens"][:slots, :32]
+        extra = _request_extras(cfg, rng)
+        if extra is not None:
+            extra = {k: np.stack([v] * prompts.shape[0])
+                     for k, v in extra.items()}
+        srv = Server(api, params, ServeConfig(
             max_new_tokens=args.max_new_tokens,
-            temperature=args.temperature, paged=args.paged,
-            block_size=args.block_size), metrics=metrics)
-        rng = np.random.default_rng(0)
-        rids = []
-        for i in range(n_req):
-            row = pipe.batch_at(0, i % max(args.batch, 1))["tokens"]
-            row = np.asarray(row[i % row.shape[0]])
-            n = int(rng.integers(4, 33))        # variable prompt lengths
-            n = min(n, int(prompt_lengths(row[None])[0]))  # stay on real toks
-            rids.append(sched.submit(row[:n]))
-        outs = sched.run()
-        for rid in rids[: args.batch]:
-            names = _decode_names(outs[rid], d, NUM_SPECIALS)
-            print(f"request {rid}: "
-                  + " -> ".join(n.split(":")[-1] for n in names))
-        summ = metrics.summary()
-        print("served {requests} requests, {tokens} tokens, "
-              "{tokens_per_sec:.1f} tok/s, p50 latency {p50_latency_s:.3f}s,"
-              " p99 {p99_latency_s:.3f}s".format(**summ))
-        if summ["kv_total_blocks"]:
-            print("kv slab: peak {kv_live_blocks_peak}/{kv_total_blocks} "
-                  "blocks live ({kv_util_peak:.0%}), peak resident "
-                  "{kv_peak_resident_bytes} bytes".format(**summ))
-        print(f"jit traces: {dict(sched.trace_counts)} "
-              f"(prefills={sched.prefills}, decode_steps="
-              f"{sched.decode_steps})")
+            temperature=args.temperature))
+        gen = srv.generate_batch(prompts, extra)
+        for i in range(prompts.shape[0]):
+            names = _decode_names(gen[i], d, NUM_SPECIALS)
+            print(f"request {i}: " + " -> ".join(n.split(":")[-1]
+                                                 for n in names))
         return
 
-    if args.continuous:
-        print(f"family {cfg.family!r} is not continuous-batchable; "
-              "falling back to the fixed-batch server")
-    prompts = pipe.batch_at(0, 0)["tokens"][: args.batch, :32]
-    srv = Server(api, params, ServeConfig(
-        max_new_tokens=args.max_new_tokens, temperature=args.temperature,
-        paged=args.paged, block_size=args.block_size))
-    gen = srv.generate(prompts)
-    for i in range(args.batch):
-        names = _decode_names(gen[i], d, NUM_SPECIALS)
-        print(f"request {i}: " + " -> ".join(n.split(":")[-1]
-                                             for n in names))
+    # continuous (default): every family serves through the scheduler;
+    # an unknown family raises at construction instead of downgrading.
+    n_req = args.requests or 3 * slots
+    metrics = ServeMetrics()
+    sched = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=slots, buckets=(16, 32, 64),
+        max_new_tokens=args.max_new_tokens,
+        temperature=args.temperature, paged=args.paged,
+        block_size=args.block_size), metrics=metrics)
+    rids = []
+    for i in range(n_req):
+        row = pipe.batch_at(0, i % slots)["tokens"]
+        row = np.asarray(row[i % row.shape[0]])
+        n = int(rng.integers(4, 33))        # variable prompt lengths
+        n = min(n, int(prompt_lengths(row[None])[0]))  # stay on real toks
+        rids.append(sched.submit(row[:n], extra=_request_extras(cfg, rng)))
+    outs = sched.run()
+    for rid in rids[:slots]:
+        names = _decode_names(outs[rid], d, NUM_SPECIALS)
+        print(f"request {rid}: "
+              + " -> ".join(n.split(":")[-1] for n in names))
+    summ = metrics.summary()
+    print("served {requests} requests, {tokens} tokens, "
+          "{tokens_per_sec:.1f} tok/s, p50 latency {p50_latency_s:.3f}s,"
+          " p99 {p99_latency_s:.3f}s".format(**summ))
+    if summ["kv_total_blocks"]:
+        print("decode state: peak {kv_live_blocks_peak}/{kv_total_blocks} "
+              "{unit} live ({kv_util_peak:.0%}), peak resident "
+              "{kv_peak_resident_bytes} bytes".format(
+                  unit="blocks" if args.paged else "rows", **summ))
+    print(f"jit traces: {dict(sched.trace_counts)} "
+          f"(prefills={sched.prefills}, decode_steps="
+          f"{sched.decode_steps})")
 
 
 if __name__ == "__main__":

@@ -73,6 +73,16 @@ def param_axes(cfg: ModelConfig):
     )
 
 
+def state_axes(cfg: ModelConfig):
+    """Logical axes of the decode state (``prefill``'s dict(kv, cross_kv)):
+    the self-attention cache shards like a plain KV cache; the frozen
+    per-row cross K/V stack batches on the same axis with a free frames
+    dim."""
+    kv = ("layers", "batch", "kv_heads", "cache_seq", "head_dim")
+    cross = ("layers", "batch", "kv_heads", None, "head_dim")
+    return dict(kv=dict(k=kv, v=kv), cross_kv=dict(k=cross, v=cross))
+
+
 def encdec_param_count(cfg: ModelConfig) -> int:
     d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
     hd, h, kv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads

@@ -87,8 +87,17 @@ def init_state(cfg: ModelConfig, batch: int, max_cache_len: int):
     )
 
 
-def _mamba_scan(x, stack, cfg, rules, states=None):
-    """Inner scan over stacked mamba blocks; states optional (decode)."""
+def state_axes(cfg: ModelConfig):
+    """Logical axes of the decode state (``init_state``), for ``repro.dist``
+    placement of the serving slot table."""
+    kv = ("layers", "batch", "kv_heads", "cache_seq", "head_dim")
+    return dict(mamba=M.mamba_state_axes(), kv=dict(k=kv, v=kv))
+
+
+def _mamba_scan(x, stack, cfg, rules, states=None, lengths=None):
+    """Inner scan over stacked mamba blocks; states optional (decode).
+    ``lengths`` (B,) masks the recurrence past each row's real length
+    (ragged prefill — see ``mamba2.mamba_block``)."""
     if states is None:
         def body(carry, bp):
             y, _ = M.mamba_block(L.apply_norm(carry, bp["ln"], cfg),
@@ -107,7 +116,8 @@ def _mamba_scan(x, stack, cfg, rules, states=None):
     def body(carry, inp):
         bp, st = inp
         y, ns = M.mamba_block(L.apply_norm(carry, bp["ln"], cfg),
-                              bp["mamba"], cfg, rules, state=st)
+                              bp["mamba"], cfg, rules, state=st,
+                              lengths=lengths)
         return carry + y, ns
     x, new_states = L.scan_or_unroll(body, x, (stack, states),
                                      cfg.scan_layers)
@@ -115,7 +125,7 @@ def _mamba_scan(x, stack, cfg, rules, states=None):
 
 
 def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
-            state=None, cache_index=None, mesh=None):
+            state=None, cache_index=None, mesh=None, lengths=None):
     g, n_groups, tail = _split(cfg)
     x = L.apply_embed(tokens, params["embed"], cfg, rules)
     s = tokens.shape[1]
@@ -150,7 +160,8 @@ def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
 
         def group_body(carry, inp):
             gp, gst, ck, cv = inp
-            y, ns = _mamba_scan(carry, gp, cfg, rules, states=gst)
+            y, ns = _mamba_scan(carry, gp, cfg, rules, states=gst,
+                                lengths=lengths)
             y, nc = apply_attn_block(y, params["shared"], cfg, rules,
                                      positions=positions,
                                      cache=dict(k=ck, v=cv),
@@ -162,7 +173,7 @@ def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
             cfg.scan_layers)
         if tail:
             x, new_tail = _mamba_scan(x, params["tail"], cfg, rules,
-                                      states=tail_st)
+                                      states=tail_st, lengths=lengths)
         else:
             new_tail = tail_st
         flat_main = jax.tree.map(
@@ -188,16 +199,21 @@ def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules, mesh=None):
 
 def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
             max_cache_len: int, mesh=None, lengths=None):
-    if lengths is not None:
-        raise ValueError(
-            "hybrid prefill cannot honor per-row lengths: the Mamba "
-            "recurrent state advances on pad tokens; serve exact-length "
-            "prompts (bucket contract) for SSM families")
+    """``lengths`` (B,) serves ragged right-PAD-padded prompts: the Mamba
+    recurrence is frozen across pads (``mamba2.mamba_block`` dt masking),
+    the shared attention block's causal mask already keeps real tokens off
+    the right-padding, logits come from each row's last real token, and the
+    next index comes back per-row (stale pad K/V in the shared cache is
+    overwritten/masked by per-row decode positions)."""
     b, s = tokens.shape
     state = init_state(cfg, b, max_cache_len)
+    li = None if lengths is None else jnp.asarray(lengths, jnp.int32)
     hidden, state = forward(params, tokens, cfg, rules, state=state,
-                            cache_index=0, mesh=mesh)
-    return _logits(params, hidden[:, -1:], cfg, rules)[:, 0], state, s
+                            cache_index=0, mesh=mesh, lengths=li)
+    if li is None:
+        return _logits(params, hidden[:, -1:], cfg, rules)[:, 0], state, s
+    last = hidden[jnp.arange(b), li - 1]
+    return _logits(params, last[:, None], cfg, rules)[:, 0], state, li
 
 
 def decode_step(params, token, state, index, cfg: ModelConfig,

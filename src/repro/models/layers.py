@@ -215,8 +215,9 @@ def apply_attention(x, p, cfg: ModelConfig, rules: ShardingRules, *,
     ``b`` lives at ``slab[table[b, p // bs], :, p % bs]``. The new token's
     K/V scatters into ``table[row, pos // bs]`` and attention gathers
     block-sparsely through the table. Decode-only: requires S == 1,
-    per-row ``cache_index``, and self-attention (ssm/hybrid/encdec/vlm
-    state layouts are rejected by the scheduler before reaching here).
+    per-row ``cache_index``, and self-attention (only ``caps.paged``
+    families reach here — ``serve/cache.PagedKVState`` gates the rest at
+    construction).
     """
     b, s, d = x.shape
     hd = cfg.resolved_head_dim

@@ -83,9 +83,15 @@ def mamba_param_count(cfg: ModelConfig) -> int:
 # Causal depthwise conv (width dc), with optional carried tail for decode.
 # ---------------------------------------------------------------------------
 
-def _causal_conv(u, w, b, tail=None):
+def _causal_conv(u, w, b, tail=None, lengths=None):
     """u: (B, S, C); w: (dc, C); tail: (B, dc-1, C) state or None.
-    Returns (out (B,S,C), new_tail)."""
+    Returns (out (B,S,C), new_tail).
+
+    ``lengths`` (B,) makes the *returned tail* ragged-correct: row ``b``'s
+    tail is the last ``dc-1`` inputs at positions ``lengths[b]-dc+1 ..
+    lengths[b]-1`` (ext coordinates ``lengths[b] .. lengths[b]+dc-2``), not
+    the right-padding — so a right-PAD-padded prefill hands decode the same
+    conv state as the trimmed prompt would."""
     dc = w.shape[0]
     if tail is None:
         tail = jnp.zeros((u.shape[0], dc - 1, u.shape[2]), u.dtype)
@@ -94,7 +100,14 @@ def _causal_conv(u, w, b, tail=None):
     for i in range(dc):
         out = out + ext[:, i:i + u.shape[1]] * w[i][None, None, :]
     out = out + b[None, None, :]
-    new_tail = ext[:, -(dc - 1):] if dc > 1 else tail
+    if dc <= 1:
+        new_tail = tail
+    elif lengths is None:
+        new_tail = ext[:, -(dc - 1):]
+    else:
+        idx = (jnp.asarray(lengths, jnp.int32)[:, None]
+               + jnp.arange(dc - 1, dtype=jnp.int32)[None, :])  # (B, dc-1)
+        new_tail = jnp.take_along_axis(ext, idx[:, :, None], axis=1)
     return jax.nn.silu(out), new_tail
 
 
@@ -189,8 +202,15 @@ def _gated_norm(y, z, scale, eps):
 
 
 def mamba_block(x, p, cfg: ModelConfig, rules: ShardingRules, *,
-                state=None):
-    """x: (B, S, D). state: decode dict or None. Returns (y, new_state)."""
+                state=None, lengths=None):
+    """x: (B, S, D). state: decode dict or None. Returns (y, new_state).
+
+    ``lengths`` (B,) serves ragged right-PAD-padded prefills exactly: at
+    pad positions ``dt`` is forced to 0, so the SSM recurrence neither
+    decays (``exp(0 * a) = 1``) nor absorbs input (``x * dt = 0``) — the
+    final state is bit-equal to stopping at each row's real length — and
+    the conv tails gather each row's last real inputs. Outputs at pad
+    positions are garbage; callers read logits at ``lengths - 1``."""
     b, s, d = x.shape
     h, n, pdim = cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_headdim
     g = cfg.ssm_groups
@@ -205,15 +225,22 @@ def mamba_block(x, p, cfg: ModelConfig, rules: ShardingRules, *,
 
     tails = state or {}
     xi, t_x = _causal_conv(xi, p["conv_x"].astype(xc.dtype),
-                           p["conv_bx"].astype(xc.dtype), tails.get("conv_x"))
+                           p["conv_bx"].astype(xc.dtype), tails.get("conv_x"),
+                           lengths=lengths)
     Br, t_B = _causal_conv(Br, p["conv_B"].astype(xc.dtype),
-                           p["conv_bB"].astype(xc.dtype), tails.get("conv_B"))
+                           p["conv_bB"].astype(xc.dtype), tails.get("conv_B"),
+                           lengths=lengths)
     Cr, t_C = _causal_conv(Cr, p["conv_C"].astype(xc.dtype),
-                           p["conv_bC"].astype(xc.dtype), tails.get("conv_C"))
+                           p["conv_bC"].astype(xc.dtype), tails.get("conv_C"),
+                           lengths=lengths)
 
     xi = constrain(xi, rules, "batch", None, "mlp")
     dtf = jax.nn.softplus(dt.astype(dt32) +
                           p["dt_bias"].astype(dt32)[None, None])
+    if lengths is not None:
+        real = (jnp.arange(s, dtype=jnp.int32)[None, :]
+                < jnp.asarray(lengths, jnp.int32)[:, None])   # (B, S)
+        dtf = jnp.where(real[..., None], dtf, 0.0)
     a = -jnp.exp(p["A_log"].astype(dt32))
 
     xh = xi.astype(dt32).reshape(b, s, h, pdim)
@@ -284,7 +311,7 @@ def param_axes(cfg: ModelConfig):
 
 
 def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
-            state=None):
+            state=None, lengths=None):
     x = L.apply_embed(tokens, params["embed"], cfg, rules)
 
     if state is None:
@@ -305,7 +332,8 @@ def forward(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
         def body(carry, inp):
             bp, st = inp
             y, ns = mamba_block(L.apply_norm(carry, bp["ln"], cfg),
-                                bp["mamba"], cfg, rules, state=st)
+                                bp["mamba"], cfg, rules, state=st,
+                                lengths=lengths)
             return carry + y, ns
         states_in = state
         x, new_state = L.scan_or_unroll(
@@ -328,18 +356,24 @@ def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules):
 def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
             max_cache_len: int = 0, lengths=None):
     """Run the prompt, returning (last_logits, state, next_index). SSM state
-    is O(1); max_cache_len is ignored (kept for API parity)."""
-    if lengths is not None:
-        raise ValueError(
-            "ssm prefill cannot honor per-row lengths: the recurrent state "
-            "advances on pad tokens; serve exact-length prompts (bucket "
-            "contract) for SSM families")
+    is O(1); max_cache_len is ignored (kept for API parity).
+
+    ``lengths`` (B,) serves ragged right-PAD-padded prompts: the recurrent
+    state is frozen across pad positions (``dt`` masked to 0 — see
+    ``mamba_block``), logits are read at each row's last real token, and
+    the next index comes back per-row."""
     b, s = tokens.shape
     state = init_mamba_state(cfg, b)
-    hidden, state = forward(params, tokens, cfg, rules, state=state)
+    li = None if lengths is None else jnp.asarray(lengths, jnp.int32)
+    hidden, state = forward(params, tokens, cfg, rules, state=state,
+                            lengths=li)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
-    logits = L.apply_unembed(hidden[:, -1:], table, cfg, rules)
-    return logits[:, 0], state, s
+    if li is None:
+        logits = L.apply_unembed(hidden[:, -1:], table, cfg, rules)
+        return logits[:, 0], state, s
+    last = hidden[jnp.arange(b), li - 1]          # (B, D) per-row last real
+    logits = L.apply_unembed(last[:, None], table, cfg, rules)
+    return logits[:, 0], state, li
 
 
 def decode_step(params, token, state, index, cfg: ModelConfig,

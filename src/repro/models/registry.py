@@ -9,25 +9,33 @@
 
 Serving contract (the continuous-batching decode path):
   * ``prefill`` honours an optional ``batch["lengths"]`` (B,) for ragged,
-    left-aligned right-PAD-padded prompts on attention-cache families
-    (dense/moe/encdec/vlm): logits are read at each row's last real token
-    and ``index`` comes back per-row. SSM-state families (ssm/hybrid)
-    raise — their recurrent state advances on pad tokens.
+    left-aligned right-PAD-padded prompts on EVERY family: attention
+    families read logits at each row's last real token; SSM-state families
+    (ssm/hybrid) freeze the recurrence across pads (``dt`` masked to 0)
+    and gather ragged-correct conv tails. ``index`` comes back per-row.
+  * dense/moe ``prefill`` honours an optional static ``batch["cache_len"]``
+    (python int) overriding the KV-cache length it allocates — paged
+    admission prefills into a bucket-covering cache instead of a full
+    ``max_cache_len`` stripe. The other families (never paged) always
+    allocate their ``max_cache_len`` layout.
   * ``decode_step``'s ``index`` is a scalar (all rows at the same depth)
     or a per-row (B,) array of absolute positions; the per-row form writes
     each row's K/V at its own cache slot and masks keys past its own
     length.
-  * **Paged KV** (dense/moe only): when the decode state carries a
-    ``"table"`` key, k/v are the shared block slab and attention routes
+  * **Paged KV** (``caps.paged`` families): when the decode state carries
+    a ``"table"`` key, k/v are the shared block slab and attention routes
     through the block-sparse paged path (``serve/paged.py``); the table is
-    passed through unchanged. ssm/hybrid (recurrent state) and encdec/vlm
-    (cross-attention cache stacks) keep their own layouts — the scheduler
-    rejects them for paged mode.
+    passed through unchanged.
+  * ``caps`` (``ServeCaps``) declares how ``serve/cache.py`` hosts the
+    family: which ``DecodeState`` implementation owns its slot table,
+    whether the paged slab applies, which extra per-request inputs prefill
+    consumes (frames/patches), and whether decode positions are bounded by
+    ``max_cache_len``.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable
 
 import jax
@@ -35,6 +43,33 @@ import jax
 from .config import ModelConfig
 from ..dist.sharding import ShardingRules, REPLICATED, adapt_rules_for_mesh
 from . import transformer, mamba2, hybrid, encdec, vision
+from . import layers as _L
+
+
+@dataclass(frozen=True)
+class ServeCaps:
+    """Serving capability flags: how ``serve/cache.py`` hosts this family.
+
+    * ``state_kind`` selects the ``DecodeState`` implementation:
+      ``"kv"`` (dense/moe), ``"recurrent"`` (ssm), ``"hybrid"``, or
+      ``"cross"`` (encdec/vlm).
+    * ``paged`` — the family's decode state is a plain dict(k, v) KV cache
+      that the shared block slab (``serve/paged.BlockPool``) can replace.
+    * ``extras`` — per-request prefill inputs beyond tokens/lengths:
+      ``(batch_key, shape_fn(cfg, batch) -> tuple, dtype_str)`` triples
+      (encdec frames, vlm patches). Frozen per request — the scheduler
+      validates them at ``submit`` and threads them through admission.
+    * ``positioned`` — decode positions index a bounded cache
+      (``max_cache_len``); False for pure recurrent state (O(1), no
+      position bound).
+    * ``state_axes`` — logical-axes tree of the decode state for
+      ``repro.dist`` placement (None = best-effort replicated).
+    """
+    state_kind: str
+    paged: bool = False
+    extras: tuple = ()
+    positioned: bool = True
+    state_axes: Callable | None = None
 
 
 @dataclass
@@ -48,6 +83,9 @@ class ModelApi:
     prefill: Callable
     decode_step: Callable
     batch_keys: tuple[str, ...]
+    caps: ServeCaps = field(default_factory=lambda: ServeCaps(
+        state_kind="kv", paged=True,
+        state_axes=lambda cfg: _L.kv_cache_axes()))
 
 
 def get_model(cfg: ModelConfig, mesh=None,
@@ -66,11 +104,13 @@ def get_model(cfg: ModelConfig, mesh=None,
             loss=lambda p, b: transformer.loss_fn(p, b, cfg, rules, mesh),
             prefill=lambda p, b: transformer.prefill(
                 p, b["tokens"], cfg, rules,
-                max_cache_len=cfg.max_cache_len, mesh=mesh,
-                lengths=b.get("lengths")),
+                max_cache_len=b.get("cache_len") or cfg.max_cache_len,
+                mesh=mesh, lengths=b.get("lengths")),
             decode_step=lambda p, tok, st, i: transformer.decode_step(
                 p, tok, st, i, cfg, rules, mesh),
             batch_keys=("tokens", "targets", "loss_mask"),
+            caps=ServeCaps(state_kind="kv", paged=True,
+                           state_axes=lambda c: _L.kv_cache_axes()),
         )
     if fam == "ssm":
         return ModelApi(
@@ -83,6 +123,8 @@ def get_model(cfg: ModelConfig, mesh=None,
             decode_step=lambda p, tok, st, i: mamba2.decode_step(
                 p, tok, st, i, cfg, rules),
             batch_keys=("tokens", "targets", "loss_mask"),
+            caps=ServeCaps(state_kind="recurrent", positioned=False,
+                           state_axes=lambda c: mamba2.mamba_state_axes()),
         )
     if fam == "hybrid":
         return ModelApi(
@@ -97,6 +139,7 @@ def get_model(cfg: ModelConfig, mesh=None,
             decode_step=lambda p, tok, st, i: hybrid.decode_step(
                 p, tok, st, i, cfg, rules, mesh),
             batch_keys=("tokens", "targets", "loss_mask"),
+            caps=ServeCaps(state_kind="hybrid", state_axes=hybrid.state_axes),
         )
     if fam == "encdec":
         return ModelApi(
@@ -111,6 +154,12 @@ def get_model(cfg: ModelConfig, mesh=None,
             decode_step=lambda p, tok, st, i: encdec.decode_step(
                 p, tok, st, i, cfg, rules),
             batch_keys=("tokens", "targets", "loss_mask", "frames"),
+            caps=ServeCaps(
+                state_kind="cross",
+                extras=(("frames",
+                         lambda c, b: (b, c.n_frames, c.d_model),
+                         "float32"),),
+                state_axes=encdec.state_axes),
         )
     if fam == "vlm":
         return ModelApi(
@@ -125,6 +174,12 @@ def get_model(cfg: ModelConfig, mesh=None,
             decode_step=lambda p, tok, st, i: vision.decode_step(
                 p, tok, st, i, cfg, rules, mesh),
             batch_keys=("tokens", "targets", "loss_mask", "patches"),
+            caps=ServeCaps(
+                state_kind="cross",
+                extras=(("patches",
+                         lambda c, b: (b, c.n_patches, c.vision_dim),
+                         "float32"),),
+                state_axes=vision.state_axes),
         )
     raise ValueError(f"unknown family {fam!r}")
 

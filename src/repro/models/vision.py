@@ -216,6 +216,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     )
 
 
+def state_axes(cfg: ModelConfig):
+    """Logical axes of the decode state (``init_cache`` + the frozen cross
+    stack): the grouped self caches batch on axis 2 (groups, ce-1 lead),
+    the tail and cross stacks on axis 1."""
+    self_ax = ("layers", None, "batch", "kv_heads", "cache_seq", "head_dim")
+    tail_ax = ("layers", "batch", "kv_heads", "cache_seq", "head_dim")
+    cross = ("layers", "batch", "kv_heads", None, "head_dim")
+    return dict(self_k=self_ax, self_v=self_ax, tail_k=tail_ax,
+                tail_v=tail_ax, cross=dict(k=cross, v=cross))
+
+
 def _logits(params, hidden, cfg, rules):
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     return L.apply_unembed(hidden, table, cfg, rules)

@@ -1,24 +1,38 @@
-"""Serving subsystem: continuous-batching decode over the unified rules.
+"""Serving subsystem: continuous-batching decode for every model family.
 
-* ``serve_loop`` — ``Server`` / ``ServeConfig``: the fixed-batch
-  compatibility surface (``generate``), a thin wrapper over the scheduler
-  for token-only attention families, with an in-place batch fallback.
+* ``cache`` — the **DecodeState protocol** and its per-family
+  implementations (``DenseKVState``, ``PagedKVState``, ``RecurrentState``,
+  ``HybridState``, ``CrossAttnState``): one cache abstraction that
+  normalizes dense/moe KV stripes, the shared paged block slab, ssm
+  recurrent rows, hybrid Mamba+shared-attention state, and encdec/vlm
+  cross-attention stacks behind ``init`` / ``can_admit`` / ``admit`` /
+  ``prefill_insert`` / ``decode_view`` / ``evict`` / ``occupancy``.
 * ``scheduler`` — ``ContinuousScheduler`` / ``SchedulerConfig`` /
-  ``Request``: request queue + slot table; admit into ``(1, bucket)``
-  prefill buckets, decode the whole slot table with per-row positions,
-  evict on EOS/budget and backfill without recompiling.
+  ``Request``: request queue + slot table over a ``DecodeState``; admit
+  into ``(1, bucket)`` prefill buckets (per-request frames/patches extras
+  ride ``submit``), decode the whole slot table with per-row positions,
+  evict on EOS/budget and backfill — zero retraces after warmup, for all
+  7 registry architectures.
+* ``serve_loop`` — ``Server``: ``generate`` is a thin scheduler wrapper
+  for every family; ``generate_batch`` is the explicit fixed-batch oracle
+  the scheduler is asserted bit-equal against.
 * ``metrics`` — ``ServeMetrics``: submit/admit/first-token/finish
-  timestamps, tokens/sec and p50/p99 latency + TTFT, plus KV-slab
-  utilization (live blocks / total) and peak-resident bytes.
+  timestamps, tokens/sec and p50/p99 latency + TTFT, plus state-residency
+  (live blocks or rows / total) and peak-resident bytes.
 * ``paged`` — ``BlockPool``: the paged-KV block slab + free-list
-  allocator (``SchedulerConfig.paged``); long and short requests share
-  fixed blocks instead of per-slot ``max_cache_len`` stripes.
+  allocator behind ``PagedKVState`` (``SchedulerConfig.paged``); long and
+  short requests share fixed blocks instead of per-slot ``max_cache_len``
+  stripes.
 """
 from .serve_loop import Server, ServeConfig, prompt_lengths
 from .scheduler import ContinuousScheduler, SchedulerConfig, Request
+from .cache import (DecodeState, DenseKVState, PagedKVState, RecurrentState,
+                    HybridState, CrossAttnState, make_decode_state)
 from .metrics import ServeMetrics
 from .paged import BlockPool, blocks_for
 
 __all__ = ["Server", "ServeConfig", "prompt_lengths",
            "ContinuousScheduler", "SchedulerConfig", "Request",
+           "DecodeState", "DenseKVState", "PagedKVState", "RecurrentState",
+           "HybridState", "CrossAttnState", "make_decode_state",
            "ServeMetrics", "BlockPool", "blocks_for"]

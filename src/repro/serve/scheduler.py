@@ -7,43 +7,38 @@ contract — no recompilation per request). The classic continuous-batching
 recipe:
 
 * A **slot table** of ``batch`` rows. Each slot owns one row of the decode
-  state (KV cache) plus host-side bookkeeping: request id, absolute
-  position, tokens emitted, budget.
+  state plus host-side bookkeeping: request id, absolute position, tokens
+  emitted, budget.
 * **Admission** pulls the next queued request, left-aligns its prompt into
   the smallest compiled ``(1, bucket_len)`` prefill bucket (right-padded
   with PAD), prefills with per-row ``lengths`` so logits come from the last
-  *real* token, and inserts the resulting row state into a free slot with
-  one ``dynamic_update_slice`` along the batch axis.
+  *real* token, and inserts the resulting row state into a free slot.
 * **Decode** runs one jitted step over the *whole* slot table with per-row
-  position indices — every active slot sits at a different depth; padding
-  K/V is overwritten/masked by the per-row cache write (see
-  ``models.registry`` serving contract). Inactive slots decode garbage that
-  is ignored and overwritten at the next admission.
+  position indices — every active slot sits at a different depth. Inactive
+  slots decode garbage that is ignored and overwritten at the next
+  admission (attention families mask/overwrite stale K/V per-row;
+  recurrent families fully overwrite the row state at insert).
 * **Eviction** frees a slot the moment its request emits EOS or exhausts
   its token budget; the next ``_admit`` backfills it from the queue.
+
+**Every family serves through this scheduler.** The state layouts live
+behind the ``DecodeState`` protocol (``serve/cache.py``): dense/moe KV
+stripes (``DenseKVState``) or the shared paged block slab
+(``PagedKVState``, ``SchedulerConfig.paged``), ssm recurrent rows
+(``RecurrentState`` — ragged prefill freezes the recurrence across pads),
+hybrid Mamba+shared-attention rows (``HybridState``), and encdec/vlm
+self-KV + frozen per-row cross-attention stacks (``CrossAttnState`` —
+per-request encoder inputs ride ``submit(..., extra=...)``). The
+scheduler itself is a pure protocol consumer: admission is gated by
+``state.can_admit``, eviction goes through ``state.evict``, and the
+KV-occupancy metrics read ``state.occupancy``.
 
 Everything device-side is jitted once per shape: one prefill per bucket
 length, one decode step, one row insert. ``trace_counts`` tracks actual
 retraces (a python-level counter bumped only when jit re-traces), which is
-what the no-recompilation-after-warmup test asserts.
+what the no-recompilation-after-warmup test asserts — for every family.
 
-**Paged KV mode** (``SchedulerConfig.paged``): instead of every slot
-owning a dense ``max_cache_len`` K/V stripe, all requests share one slab
-of fixed ``block_size`` blocks (``serve/paged.BlockPool``). Admission is
-gated by **blocks available**, not just a free slot row: a request
-reserves its worst case (ceil((prompt_len + budget - 1) / block_size))
-up front — so decode can never strand mid-request — but blocks are
-*allocated* lazily: the prompt's blocks at admission, then one per block
-boundary as decode proceeds. Eviction returns the request's blocks to the
-pool immediately, so a short request no longer pins a long request's
-worth of slab and the same bytes admit several times more mixed-length
-requests (``benchmarks/serve_tput.py`` measures it). The decode state
-carries the ``(batch, max_blocks)`` block table; attention gathers
-through it (``kernels.flash_attention.paged_decode_attention``) bit-equal
-to the dense path. Dense/moe only — ssm/hybrid/encdec/vlm state layouts
-are rejected at construction.
-
-Sharding: with ``mesh`` given, params and the KV-cache slab are placed via
+Sharding: with ``mesh`` given, params and the decode state are placed via
 ``repro.dist`` rules (``tree_shardings`` over the models' logical axes) and
 every device call runs under ``dist.compat.use_mesh`` — the same rules that
 constrain the batch/kv_heads dims on the production mesh degrade to
@@ -53,7 +48,7 @@ from __future__ import annotations
 
 import collections
 from contextlib import nullcontext
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -62,10 +57,9 @@ import numpy as np
 from ..data.pipeline import PAD_ID, EOS_ID
 from ..dist.compat import use_mesh
 from ..dist.sharding import tree_shardings
-from ..models import layers as L
 from ..models.registry import ModelApi
+from .cache import make_decode_state
 from .metrics import ServeMetrics
-from .paged import BlockPool, blocks_for
 
 
 @dataclass(frozen=True)
@@ -73,6 +67,7 @@ class Request:
     rid: int
     tokens: np.ndarray           # (prompt_len,) int32, no padding
     max_new_tokens: int
+    extra: dict | None = None    # per-request prefill extras (frames/...)
 
 
 @dataclass
@@ -82,7 +77,7 @@ class SchedulerConfig:
     max_new_tokens: int = 32               # default per-request budget
     temperature: float = 0.0               # 0 = greedy
     seed: int = 0
-    # paged KV: share one slab of fixed blocks across all slots
+    # paged KV (caps.paged families): share one slab of fixed blocks
     paged: bool = False
     block_size: int = 16                   # tokens per KV block
     num_blocks: int | None = None          # allocatable blocks; default
@@ -93,33 +88,19 @@ class SchedulerConfig:
 class ContinuousScheduler:
     """Serve an open-ended request stream from fixed-shape buffers.
 
-    Supports the attention-cache families whose decode state stacks the
-    batch on axis 1 of every leaf (dense/moe) — exactly what the row
-    insert relies on. SSM-state families need exact-length prompts and a
-    different state layout; they stay on the batch ``Server`` path.
+    Hosts every registry family: the family's decode-state layout is
+    resolved from its ``ServeCaps`` into a ``DecodeState`` implementation
+    (``serve/cache.py``) and the scheduler operates purely on that
+    protocol. Unknown families fail loudly at construction.
 
     With ``cfg.paged`` the per-slot K/V stripes are replaced by a shared
     ``BlockPool`` slab: admission is gated by blocks available, tables
     grow lazily as decode crosses block boundaries, and eviction returns
-    blocks to the pool (see the module docstring and ``serve/paged.py``).
+    blocks to the pool (see ``serve/cache.PagedKVState``).
     """
-
-    SUPPORTED_FAMILIES = ("dense", "moe")
 
     def __init__(self, api: ModelApi, params, cfg: SchedulerConfig,
                  mesh=None, metrics: ServeMetrics | None = None):
-        if api.cfg.family not in self.SUPPORTED_FAMILIES:
-            raise ValueError(
-                f"ContinuousScheduler supports {self.SUPPORTED_FAMILIES}, "
-                f"got family {api.cfg.family!r}; use Server.generate's "
-                "batch path for SSM/cross-attention families")
-        # a request writes its last decode input at prompt_len + budget - 2,
-        # so the cache must hold max(buckets) + max_new_tokens - 1 positions
-        if api.cfg.max_cache_len < max(cfg.buckets) + cfg.max_new_tokens - 1:
-            raise ValueError(
-                f"max_cache_len={api.cfg.max_cache_len} cannot hold the "
-                f"largest bucket {max(cfg.buckets)} plus "
-                f"{cfg.max_new_tokens} generated tokens")
         self.api = api
         self.cfg = cfg
         self.mesh = mesh
@@ -128,22 +109,21 @@ class ContinuousScheduler:
         self.decode_steps = 0
         self.prefills = 0
 
-        self.pool: BlockPool | None = None
-        if cfg.paged:
-            if api.cfg.max_cache_len % cfg.block_size != 0:
-                raise ValueError(
-                    f"block_size={cfg.block_size} must divide "
-                    f"max_cache_len={api.cfg.max_cache_len}")
-            self._max_blocks = api.cfg.max_cache_len // cfg.block_size
-            num_blocks = (cfg.batch * self._max_blocks
-                          if cfg.num_blocks is None else cfg.num_blocks)
-            self.pool = BlockPool.for_model(
-                api.cfg, num_blocks=num_blocks, block_size=cfg.block_size)
-
         if mesh is not None:
             params = jax.device_put(
                 params, tree_shardings(api.axes(), api.rules, mesh))
         self.params = params
+
+        self.state = make_decode_state(api, cfg, params, mesh=mesh,
+                                       counted=self._counted)
+        cap = self.state.max_positions()
+        # a request writes its last decode input at prompt_len + budget - 2,
+        # so a bounded cache must hold max(buckets) + max_new_tokens - 1
+        if cap is not None and cap < max(cfg.buckets) + cfg.max_new_tokens - 1:
+            raise ValueError(
+                f"max_cache_len={cap} cannot hold the largest bucket "
+                f"{max(cfg.buckets)} plus {cfg.max_new_tokens} generated "
+                "tokens")
 
         temp = cfg.temperature
 
@@ -153,10 +133,7 @@ class ContinuousScheduler:
             return jax.random.categorical(
                 key, logits / temp, axis=-1).astype(jnp.int32)
 
-        def prefill_fn(p, toks, lengths, key):
-            logits, state, idx = api.prefill(
-                p, dict(tokens=toks, lengths=lengths))
-            return sample(logits, key), state, idx
+        self._sample = sample
 
         def step_fn(p, cur_tok, state, pos, active, key):
             # inactive slots decode at position 0: their row state is dead
@@ -167,39 +144,8 @@ class ContinuousScheduler:
             nxt = sample(logits, key)
             return jnp.where(active, nxt, PAD_ID), state
 
-        def insert_fn(state, row_state, slot):
-            return jax.tree.map(
-                lambda c, r: jax.lax.dynamic_update_slice_in_dim(
-                    c, r.astype(c.dtype), slot, axis=1),
-                state, row_state)
-
-        bs_blk = cfg.block_size
-
-        def paged_insert_fn(state, row_state, slot, ids):
-            """Scatter a prefilled row into the shared slab: K/V go to the
-            blocks in ``ids`` (bucket-covering; trailing ids may be 0 =
-            trash for all-pad blocks), any other state leaves (stub
-            counters etc.) keep the dense axis-1 row insert."""
-            nb = ids.shape[0]
-            out = dict(state)
-            for key in ("k", "v"):
-                slab, row = state[key], row_state[key]
-                lyr, _, kvh, _, hd = row.shape
-                blocks = row[:, 0, :, :nb * bs_blk, :].reshape(
-                    lyr, kvh, nb, bs_blk, hd).transpose(0, 2, 1, 3, 4)
-                out[key] = slab.at[:, ids].set(blocks.astype(slab.dtype))
-            for key in state:
-                if key in ("k", "v", "table"):
-                    continue
-                out[key] = jax.lax.dynamic_update_slice_in_dim(
-                    state[key], row_state[key].astype(state[key].dtype),
-                    slot, axis=1)
-            return out
-
-        self._prefill = jax.jit(self._counted("prefill", prefill_fn))
         self._step = jax.jit(self._counted("decode", step_fn))
-        self._insert = jax.jit(self._counted(
-            "insert", paged_insert_fn if cfg.paged else insert_fn))
+        self._prefill_fns: dict[int | None, callable] = {}
 
         # slot table (host-side bookkeeping)
         B = cfg.batch
@@ -210,23 +156,19 @@ class ContinuousScheduler:
         self._emitted = np.zeros(B, np.int32)
         self._budget = np.zeros(B, np.int32)
 
-        # paged bookkeeping: per-slot allocated block ids, worst-case
-        # reservation, and the host copy of the (B, max_blocks) block table
-        # (entry 0 = trash block; rows are zeroed on eviction so dead-row
-        # garbage writes can never touch a reallocated block)
-        if cfg.paged:
-            self._blocks: list[list[int]] = [[] for _ in range(B)]
-            self._reserved = np.zeros(B, np.int32)
-            self._table = np.zeros((B, self._max_blocks), np.int32)
-
         self._pending: collections.deque[Request] = collections.deque()
         self._next_rid = 0
         self._step_counter = 0
         self._key = jax.random.PRNGKey(cfg.seed)
         self.outputs: dict[int, list[int]] = {}
-        self._state = self._init_state()
+        self.state.init(B, cfg.max_new_tokens)
 
     # -- plumbing ----------------------------------------------------------
+
+    @property
+    def pool(self):
+        """The paged block pool (None in dense mode) — benchmark surface."""
+        return getattr(self.state, "pool", None)
 
     def _counted(self, name, fn):
         def wrapped(*args):
@@ -238,63 +180,33 @@ class ContinuousScheduler:
     def _ctx(self):
         return use_mesh(self.mesh) if self.mesh is not None else nullcontext()
 
-    def _init_state(self):
-        """Zero decode state of the full-slot-table shape, via eval_shape
-        (no wasted prefill compute, no extra compile)."""
-        B, b0 = self.cfg.batch, self.cfg.buckets[0]
-        if self.cfg.paged:
-            return self._init_paged_state()
-        shapes = jax.eval_shape(
-            lambda p: self.api.prefill(p, dict(
-                tokens=jnp.zeros((B, b0), jnp.int32),
-                lengths=jnp.ones((B,), jnp.int32)))[1],
-            self.params)
-        state = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), shapes)
-        if self.mesh is not None:
-            try:
-                shardings = tree_shardings(L.kv_cache_axes(), self.api.rules,
-                                           self.mesh)
-                state = jax.device_put(state, shardings)
-            except ValueError:
-                pass  # state tree doesn't match the plain KV layout
-        return state
+    def _prefill_for(self, cache_len: int | None):
+        """The jitted admission prefill for a static cache length (paged
+        admission prefills into a bucket-covering cache; None keeps the
+        family default). One python callable per cache length, all bumping
+        the shared 'prefill' trace counter."""
+        fn = self._prefill_fns.get(cache_len)
+        if fn is None:
+            sample = self._sample
 
-    def _init_paged_state(self):
-        """Shared block slab + per-row block table, plus full-slot-table
-        copies of any non-KV state leaves the model's prefill returns
-        (shape probed on a single row via eval_shape)."""
-        B, b0 = self.cfg.batch, self.cfg.buckets[0]
-        shapes = jax.eval_shape(
-            lambda p: self.api.prefill(p, dict(
-                tokens=jnp.zeros((1, b0), jnp.int32),
-                lengths=jnp.ones((1,), jnp.int32)))[1],
-            self.params)
-        if not isinstance(shapes, dict) or not {"k", "v"} <= set(shapes):
-            raise ValueError(
-                "paged KV needs a dict(k, v) decode state; got "
-                f"{type(shapes).__name__} — this family keeps its dense "
-                "layout")
-        state = dict(self.pool.init_slab())
-        for key, a in shapes.items():
-            if key in ("k", "v"):
-                continue
-            state[key] = jnp.zeros((a.shape[0], B) + a.shape[2:], a.dtype)
-        state["table"] = jnp.asarray(self._table)
-        if self.mesh is not None:
-            try:
-                axes = dict(L.paged_kv_cache_axes(),
-                            **{k: None for k in state
-                               if k not in ("k", "v")})
-                state = jax.device_put(
-                    state, tree_shardings(axes, self.api.rules, self.mesh))
-            except ValueError:
-                pass
-        return state
+            def prefill_fn(p, batch, key):
+                b = dict(batch)
+                if cache_len is not None:
+                    b["cache_len"] = cache_len
+                logits, state, idx = self.api.prefill(p, b)
+                return sample(logits, key), state, idx
+
+            fn = jax.jit(self._counted("prefill", prefill_fn))
+            self._prefill_fns[cache_len] = fn
+        return fn
 
     # -- public API --------------------------------------------------------
 
-    def submit(self, tokens, max_new_tokens: int | None = None) -> int:
-        """Queue one request; returns its rid. ``tokens``: (prompt_len,)."""
+    def submit(self, tokens, max_new_tokens: int | None = None,
+               extra: dict | None = None) -> int:
+        """Queue one request; returns its rid. ``tokens``: (prompt_len,).
+        ``extra`` carries the family's per-request prefill inputs (encdec
+        frames, vlm patches) — validated against the registry caps."""
         toks = np.asarray(tokens, np.int32).reshape(-1)
         if len(toks) == 0:
             toks = np.array([PAD_ID], np.int32)
@@ -305,26 +217,44 @@ class ContinuousScheduler:
         bucket = self._bucket_for(len(toks))
         budget = (self.cfg.max_new_tokens if max_new_tokens is None
                   else max_new_tokens)
-        if len(toks) + budget - 1 > self.api.cfg.max_cache_len:
+        cap = self.state.max_positions()
+        if cap is not None and len(toks) + budget - 1 > cap:
             raise ValueError(
                 f"prompt length {len(toks)} (bucket {bucket}) + budget "
                 f"{budget} needs {len(toks) + budget - 1} cache positions "
-                f"and overflows max_cache_len={self.api.cfg.max_cache_len}")
-        if self.pool is not None:
-            need = self.pool.blocks_needed(len(toks), budget)
-            if need > self.pool.capacity:
-                raise ValueError(
-                    f"prompt length {len(toks)} (bucket {bucket}) + budget "
-                    f"{budget} requires {need} KV blocks of "
-                    f"{self.pool.block_size} tokens, but the pool holds "
-                    f"only {self.pool.capacity} blocks total")
+                f"and overflows max_cache_len={cap}")
+        self.state.validate_request(len(toks), bucket, budget)
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid=rid, tokens=toks, max_new_tokens=budget)
+        req = Request(rid=rid, tokens=toks, max_new_tokens=budget,
+                      extra=self._normalize_extra(extra))
         self._pending.append(req)
         if self.metrics is not None:
             self.metrics.record_submit(rid, prompt_len=len(toks))
         return rid
+
+    def _normalize_extra(self, extra: dict | None) -> dict | None:
+        spec = self.api.caps.extras
+        need = [k for k, _, _ in spec]
+        got = sorted(extra or {})
+        if sorted(need) != got:
+            raise ValueError(
+                f"family {self.api.cfg.family!r} requires extras {need} "
+                f"per request, got {got}")
+        if not spec:
+            return None
+        norm = {}
+        for key, shape_fn, dt in spec:
+            want = tuple(shape_fn(self.api.cfg, 1))
+            arr = np.asarray(extra[key], dt)
+            if arr.shape == want[1:]:
+                arr = arr[None]
+            if arr.shape != want:
+                raise ValueError(
+                    f"extra {key!r} must have shape {want[1:]} (one row), "
+                    f"got {arr.shape}")
+            norm[key] = arr
+        return norm
 
     @property
     def num_active(self) -> int:
@@ -347,31 +277,32 @@ class ContinuousScheduler:
     def _admit(self) -> None:
         """Backfill free slots from the queue (prefill + row insert).
 
-        Paged mode admits by **blocks available**, not just free rows: the
-        head request's worst case must be reservable, else admission stalls
-        (FIFO) until an eviction frees blocks. Reservation happens before
-        the insert; allocation is lazy (prompt blocks now, the rest as
-        decode crosses block boundaries in ``step``)."""
+        Beyond a free row, the head request must pass the state's resource
+        gate (``can_admit`` — paged mode reserves its worst case in
+        blocks), else admission stalls (FIFO) until an eviction frees
+        resources."""
         free = np.flatnonzero(~self._active)
         fi = 0
         while self._pending and fi < len(free):
             req = self._pending[0]                  # peek: may not fit yet
             n = len(req.tokens)
             bucket = self._bucket_for(n)
-            if self.pool is not None:
-                need = self.pool.blocks_needed(n, req.max_new_tokens)
-                if not self.pool.can_reserve(need):
-                    break                           # wait for an eviction
+            if not self.state.can_admit(n, req.max_new_tokens):
+                break                               # wait for an eviction
             self._pending.popleft()
             slot = int(free[fi])
             toks = np.full((1, bucket), PAD_ID, np.int32)
             toks[0, :n] = req.tokens
+            batch = dict(tokens=jnp.asarray(toks),
+                         lengths=jnp.asarray([n], jnp.int32))
+            if req.extra:
+                batch.update({k: jnp.asarray(v)
+                              for k, v in req.extra.items()})
             key = jax.random.fold_in(
                 jax.random.fold_in(self._key, 1), req.rid)
+            prefill = self._prefill_for(self.state.prefill_cache_len(bucket))
             with self._ctx():
-                tok0, row_state, idx = self._prefill(
-                    self.params, jnp.asarray(toks),
-                    jnp.asarray([n], jnp.int32), key)
+                tok0, row_state, idx = prefill(self.params, batch, key)
             self.prefills += 1
             if self.metrics is not None:
                 self.metrics.record_admit(req.rid)
@@ -382,27 +313,9 @@ class ContinuousScheduler:
             if t0 == EOS_ID or req.max_new_tokens <= 1:
                 self._finish(req.rid)      # done at admission: slot stays free
                 continue
-            if self.pool is not None:
-                self.pool.reserve(need)
-                self._reserved[slot] = need
-                ids = [self.pool.take() for _ in range(blocks_for(
-                    n, self.cfg.block_size))]
-                self._blocks[slot] = ids
-                self._table[slot, :] = 0
-                self._table[slot, :len(ids)] = ids
-                # bucket-covering id vector for the insert: all-pad blocks
-                # past the prompt go to the trash block (id 0)
-                nb = blocks_for(bucket, self.cfg.block_size)
-                bucket_ids = np.zeros(nb, np.int32)
-                bucket_ids[:len(ids)] = ids
-                with self._ctx():
-                    self._state = self._insert(
-                        self._state, row_state, jnp.int32(slot),
-                        jnp.asarray(bucket_ids))
-            else:
-                with self._ctx():
-                    self._state = self._insert(self._state, row_state,
-                                               jnp.int32(slot))
+            self.state.admit(slot, n, req.max_new_tokens)
+            with self._ctx():
+                self.state.prefill_insert(row_state, slot, n, bucket)
             self._active[slot] = True
             self._slot_rid[slot] = req.rid
             self._pos[slot] = n
@@ -417,43 +330,21 @@ class ContinuousScheduler:
         self._admit()
         if not self._active.any():
             return {}
-        if self.pool is not None:
-            # lazy table growth: map a fresh block the moment a row's write
-            # position crosses into it (the admission reservation guarantees
-            # take() succeeds), then refresh the device table copy — same
-            # shape every step, so the jitted decode never retraces.
-            for slot in np.flatnonzero(self._active):
-                b_idx = int(self._pos[slot]) // self.cfg.block_size
-                if b_idx >= len(self._blocks[slot]):
-                    blk = self.pool.take()
-                    self._blocks[slot].append(blk)
-                    self._table[slot, b_idx] = blk
-            self._state["table"] = jnp.asarray(self._table)
+        view = self.state.decode_view(self._pos, self._active)
         key = jax.random.fold_in(self._key, 2 * self._step_counter)
         self._step_counter += 1
         with self._ctx():
-            nxt, self._state = self._step(
-                self.params, jnp.asarray(self._cur_tok), self._state,
+            nxt, new_state = self._step(
+                self.params, jnp.asarray(self._cur_tok), view,
                 jnp.asarray(self._pos), jnp.asarray(self._active), key)
+        self.state.commit(new_state)
         self.decode_steps += 1
         nxt = np.asarray(nxt)
-        # sample KV occupancy before evictions return blocks: the peak
+        # sample occupancy before evictions release resources: the peak
         # must reflect what this decode actually held resident
         if self.metrics is not None:
-            if self.pool is not None:
-                self.metrics.record_kv_usage(
-                    self.pool.live_blocks, self.pool.capacity,
-                    self.pool.block_bytes)
-            else:
-                # dense: every active slot pins one max_cache_len stripe
-                row_bytes = 0
-                if isinstance(self._state, dict) and \
-                        {"k", "v"} <= set(self._state):
-                    for leaf in (self._state["k"], self._state["v"]):
-                        row_bytes += (int(np.prod(leaf.shape))
-                                      // leaf.shape[1]) * leaf.dtype.itemsize
-                self.metrics.record_kv_usage(
-                    self.num_active, self.cfg.batch, row_bytes)
+            live, total, unit = self.state.occupancy(self.num_active)
+            self.metrics.record_kv_usage(live, total, unit)
         emissions: dict[int, int] = {}
         for slot in np.flatnonzero(self._active):
             rid = int(self._slot_rid[slot])
@@ -468,13 +359,7 @@ class ContinuousScheduler:
                 self._finish(rid)
                 self._active[slot] = False     # evict; backfilled next admit
                 self._slot_rid[slot] = -1
-                if self.pool is not None:
-                    self.pool.free(self._blocks[slot])
-                    self.pool.cancel(
-                        int(self._reserved[slot]) - len(self._blocks[slot]))
-                    self._blocks[slot] = []
-                    self._reserved[slot] = 0
-                    self._table[slot, :] = 0   # dead-row writes -> trash
+                self.state.evict(slot)
         self._cur_tok = nxt.astype(np.int32)
         self._admit()
         return emissions

@@ -1,13 +1,20 @@
 """Serving loop: batched prefill + incremental decode.
 
-``Server.generate`` is the fixed-batch compatibility surface. For
-token-only attention-cache families (dense/moe) it is a thin wrapper over
-the continuous-batching ``ContinuousScheduler`` (scheduler.py): each row is
-trimmed to its real length, admitted as one request, and decoded with
-per-row positions — so right-padded prompts decode bit-identically to
-their trimmed copies. Families the scheduler cannot host (SSM state, or
-cross-attention extras like frames/patches) fall back to an in-place batch
-loop with the same correctness fixes:
+``Server.generate`` is the fixed-batch compatibility surface, and for
+EVERY family it is a thin wrapper over the continuous-batching
+``ContinuousScheduler`` (scheduler.py): each row is trimmed to its real
+length, admitted as one request (per-row encoder extras — frames/patches
+— ride along), and decoded with per-row positions — so right-padded
+prompts decode bit-identically to their trimmed copies. The family
+rejection branches are gone: ssm/hybrid serve through ``RecurrentState``
+/ ``HybridState`` (ragged prefill freezes the recurrence across pads) and
+encdec/vlm through ``CrossAttnState`` (see ``serve/cache.py``).
+
+``Server.generate_batch`` is the explicit fixed-batch oracle — one
+prefill over the whole rectangle, lockstep decode to the longest row —
+kept as the independent reference the family-matrix equivalence tests
+(and ``launch/serve.py --batch``) compare the scheduler against, with the
+decode-loop correctness fixes:
 
 * the RNG key is split *before* the first post-prefill sample, so the
   prefill-token draw and later decode draws are independent streams;
@@ -33,8 +40,8 @@ class ServeConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0     # 0 = greedy
     seed: int = 0
-    # paged KV cache (dense/moe only): fixed-size blocks shared across
-    # slots instead of a max_cache_len stripe per row — see serve/paged.py
+    # paged KV cache (caps.paged families): fixed-size blocks shared
+    # across slots instead of a max_cache_len stripe per row — serve/paged
     paged: bool = False
     block_size: int = 16
     num_blocks: int | None = None
@@ -73,11 +80,14 @@ class Server:
         """Round the prefill width up a power-of-two ladder so generate()
         calls with nearby prompt widths share one compiled scheduler (rows
         are trimmed to real length before submit, so the width is only a
-        compilation key). Falls back to the exact width when the rounded
-        bucket would overflow the KV cache but the prompt itself fits."""
+        compilation key). Position-bounded families fall back to the exact
+        width when the rounded bucket would overflow the KV cache but the
+        prompt itself fits; recurrent state has no such bound."""
         b = 8
         while b < prompt_len:
             b *= 2
+        if not self.api.caps.positioned:
+            return b
         cap = self.api.cfg.max_cache_len - self.scfg.max_new_tokens + 1
         return b if b <= cap else prompt_len
 
@@ -102,28 +112,24 @@ class Server:
         """prompts: (B, L) int32, PAD-padded on the right. Returns
         (B, max_new_tokens) tokens; rows freeze at EOS once emitted.
 
-        Right-padded rows are decoded with per-row lengths (prefill reads
-        each row's last real token; decode masks by per-row position), so a
-        padded prompt decodes identically to its trimmed copy.
+        Every family routes through the continuous scheduler: rows are
+        trimmed to their real lengths and admitted as one request each
+        (``extra`` values are sliced per row — encdec frames, vlm
+        patches), so a padded prompt decodes identically to its trimmed
+        copy.
         """
         prompts = np.asarray(prompts, np.int32)
-        if extra is None and \
-                self.api.cfg.family in ContinuousScheduler.SUPPORTED_FAMILIES:
-            return self._generate_continuous(prompts)
-        if self.scfg.paged:
-            raise ValueError(
-                f"paged KV serves {ContinuousScheduler.SUPPORTED_FAMILIES} "
-                f"only; family {self.api.cfg.family!r} keeps its own state "
-                "layout on the dense batch path")
-        return self._generate_batch(prompts, extra)
-
-    def _generate_continuous(self, prompts: np.ndarray):
         b, l = prompts.shape
         lens = prompt_lengths(prompts)
         sched = self.scheduler_for(b, self._bucket_width(int(lens.max())))
-        rids = [sched.submit(prompts[i, :lens[i]],
-                             max_new_tokens=self.scfg.max_new_tokens)
-                for i in range(b)]
+        rids = []
+        for i in range(b):
+            row_extra = None
+            if extra:
+                row_extra = {k: np.asarray(v)[i] for k, v in extra.items()}
+            rids.append(sched.submit(
+                prompts[i, :lens[i]],
+                max_new_tokens=self.scfg.max_new_tokens, extra=row_extra))
         outs = sched.run()
         n = self.scfg.max_new_tokens
         rows = []
@@ -133,15 +139,14 @@ class Server:
                 [toks, np.full(n - len(toks), EOS_ID, np.int32)]))
         return np.stack(rows, axis=0)
 
-    def _generate_batch(self, prompts: np.ndarray, extra: dict | None):
-        """Fallback fixed-batch loop (SSM families / frames / patches)."""
+    def generate_batch(self, prompts: np.ndarray, extra: dict | None = None):
+        """Fixed-batch oracle: one ragged prefill over the whole (B, L)
+        rectangle, lockstep decode to the longest row. The independent
+        reference path the scheduler is asserted bit-equal against."""
+        prompts = np.asarray(prompts, np.int32)
         b, l = prompts.shape
-        fam = self.api.cfg.family
-        batch = dict(tokens=jnp.asarray(prompts, jnp.int32))
-        if fam not in ("ssm", "hybrid"):
-            # attention-cache families honor ragged rows; SSM state would
-            # be poisoned by pads, so those keep the full-bucket contract.
-            batch["lengths"] = jnp.asarray(prompt_lengths(prompts))
+        batch = dict(tokens=jnp.asarray(prompts, jnp.int32),
+                     lengths=jnp.asarray(prompt_lengths(prompts)))
         if extra:
             batch.update({k: jnp.asarray(v) for k, v in extra.items()})
         logits, state, index = self._prefill(self.params, batch)

@@ -1,15 +1,19 @@
 """Serving subsystem tests: decode-loop correctness fixes, ragged
-prefill-mask equivalence, and continuous-batching scheduler invariants.
+prefill-mask equivalence, DecodeState family matrix, and
+continuous-batching scheduler invariants.
 
-Two kinds of model drive these:
+Three kinds of model drive these:
 
 * the real smoke behaviour LM (dense) for numerical properties — greedy
   determinism and the padded-vs-trimmed bit-equality the per-row position
   masking guarantees;
+* one real smoke model per registry family (the 7-arch matrix) asserting
+  the unified DecodeState contract: scheduler output bit-equal to the
+  ``Server.generate_batch`` fixed-batch oracle, admit/evict/backfill
+  invariants, and zero retraces after warmup on a host-local mesh;
 * a deterministic stub ModelApi (an "echo+1, EOS after k steps" machine
   with a real KV-cache-shaped state) for machinery properties — exact
-  decode-step counts, EOS freezing, admit/evict/backfill accounting and
-  the no-recompilation-after-warmup contract.
+  decode-step counts, EOS freezing, admission accounting.
 """
 import numpy as np
 import jax
@@ -17,7 +21,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import smoke_config
-from repro.models.registry import get_model, ModelApi
+from repro.models.registry import get_model, ModelApi, ServeCaps
 from repro.data.pipeline import PAD_ID, EOS_ID
 from repro.dist import make_host_mesh, REPLICATED
 from repro.serve import (Server, ServeConfig, ContinuousScheduler,
@@ -25,6 +29,12 @@ from repro.serve import (Server, ServeConfig, ContinuousScheduler,
                          BlockPool, blocks_for)
 
 VOCAB = 64
+
+# one representative smoke arch per family (+ the paper LM): the 7-arch
+# serving matrix every DecodeState implementation is exercised through
+MATRIX_ARCHS = ("behavior-lm-100m", "qwen3-0.6b", "olmoe-1b-7b",
+                "mamba2-370m", "zamba2-7b", "whisper-tiny",
+                "llama-3.2-vision-11b")
 
 
 @pytest.fixture(scope="module")
@@ -36,14 +46,41 @@ def dense():
     return api, params
 
 
+@pytest.fixture(scope="module")
+def family_model():
+    """Per-arch (api, params) cache shared across the matrix tests."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = smoke_config(arch).with_(vocab_size=VOCAB,
+                                           max_cache_len=64)
+            api = get_model(cfg)
+            cache[arch] = (api, api.init(jax.random.PRNGKey(0)))
+        return cache[arch]
+    return get
+
+
+def _family_extra(cfg, rng):
+    """One request's stub-frontend encoder inputs, or None."""
+    if cfg.family == "encdec":
+        return dict(frames=rng.standard_normal(
+            (cfg.n_frames, cfg.d_model)).astype(np.float32))
+    if cfg.family == "vlm":
+        return dict(patches=rng.standard_normal(
+            (cfg.n_patches, cfg.vision_dim)).astype(np.float32))
+    return None
+
+
 # ---------------------------------------------------------------------------
 # Stub model: next token = clip(prev + 1), EOS after `eos_after` decodes.
-# State leaves are (X, B, ...) so the scheduler's axis-1 row insert works;
+# State leaves are (X, B, ...) so the scheduler's generic row insert works;
 # k/v are KV-cache-shaped so the paged block scatter works too, and
 # decode passes unknown state keys (the block table) through.
 # ---------------------------------------------------------------------------
 
-def _stub_api(eos_after: int = 3, family: str = "dense") -> ModelApi:
+def _stub_api(eos_after: int = 3, family: str = "dense",
+              caps: ServeCaps | None = None) -> ModelApi:
     cfg = smoke_config("behavior-lm-100m").with_(
         vocab_size=VOCAB, max_cache_len=64, family=family)
 
@@ -69,10 +106,13 @@ def _stub_api(eos_after: int = 3, family: str = "dense") -> ModelApi:
         nxt = jnp.where(gen[0] >= eos_after, EOS_ID, _next(tok))
         return 10.0 * jax.nn.one_hot(nxt, VOCAB), dict(state, gen=gen)
 
-    return ModelApi(cfg=cfg, rules=REPLICATED, mesh=None,
-                    init=lambda key: {}, axes=lambda: {},
-                    loss=None, prefill=prefill, decode_step=decode_step,
-                    batch_keys=("tokens",))
+    api = ModelApi(cfg=cfg, rules=REPLICATED, mesh=None,
+                   init=lambda key: {}, axes=lambda: {},
+                   loss=None, prefill=prefill, decode_step=decode_step,
+                   batch_keys=("tokens",))
+    if caps is not None:
+        api.caps = caps
+    return api
 
 
 def _stub_expected(prompt, budget, eos_after):
@@ -132,14 +172,37 @@ def test_padded_prompt_decodes_bit_equal_to_trimmed(dense):
         assert np.array_equal(padded[1], trimmed[0]), l
 
 
-def test_ragged_prefill_rejected_for_ssm_state():
-    cfg = smoke_config("mamba2-370m").with_(vocab_size=VOCAB)
+@pytest.mark.parametrize("arch", ["mamba2-370m", "zamba2-7b"])
+def test_ragged_ssm_prefill_bit_equals_trimmed(arch):
+    """The recurrent state must be frozen across right-padding: a padded
+    ragged prefill hands decode the exact state of the trimmed prompt
+    (dt masked to 0 + ragged-correct conv tails)."""
+    cfg = smoke_config(arch).with_(vocab_size=VOCAB, max_cache_len=64)
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    toks = jnp.ones((2, 8), jnp.int32)
-    with pytest.raises(ValueError, match="per-row lengths"):
-        api.prefill(params, dict(tokens=toks,
-                                 lengths=jnp.array([8, 5], jnp.int32)))
+    rng = np.random.default_rng(12)
+    n, S = 5, 8
+    row = rng.integers(4, VOCAB, n).astype(np.int32)
+    padded = np.zeros((1, S), np.int32)
+    padded[0, :n] = row
+    lg_p, st_p, idx_p = api.prefill(params, dict(
+        tokens=jnp.asarray(padded), lengths=jnp.asarray([n], jnp.int32)))
+    lg_t, st_t, idx_t = api.prefill(params, dict(
+        tokens=jnp.asarray(row[None])))
+    assert np.array_equal(np.asarray(lg_p), np.asarray(lg_t))
+    assert int(np.asarray(idx_p)[0]) == idx_t == n
+    # recurrent leaves (mamba conv tails + SSM heads) must be bit-equal;
+    # attention KV (hybrid) only up to n — pads beyond are masked
+    tree = st_p if arch == "mamba2-370m" else st_p["mamba"]
+    oracle = st_t if arch == "mamba2-370m" else st_t["mamba"]
+    for key in tree:
+        np.testing.assert_array_equal(np.asarray(tree[key]),
+                                      np.asarray(oracle[key]), err_msg=key)
+    l2p, _ = api.decode_step(params, jnp.argmax(lg_p, -1).astype(jnp.int32),
+                             st_p, jnp.asarray(idx_p))
+    l2t, _ = api.decode_step(params, jnp.argmax(lg_t, -1).astype(jnp.int32),
+                             st_t, jnp.int32(n))
+    assert np.array_equal(np.asarray(l2p), np.asarray(l2t))
 
 
 # ---------------------------------------------------------------------------
@@ -163,7 +226,7 @@ def test_temperature_seeds_differ_at_token0(dense):
 
 
 def test_batch_path_first_sample_uses_split_subkey():
-    # ssm smoke model exercises the fallback batch loop
+    # the ssm smoke model through the explicit fixed-batch oracle path
     cfg = smoke_config("mamba2-370m").with_(vocab_size=VOCAB)
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
@@ -172,9 +235,11 @@ def test_batch_path_first_sample_uses_split_subkey():
     temp, seed = 2.0, 0
     srv = Server(api, params, ServeConfig(
         max_new_tokens=2, temperature=temp, seed=seed))
-    got = srv.generate(prompts)[:, 0]
+    got = srv.generate_batch(prompts)[:, 0]
     # same jitted prefill the server used, so logits match bitwise
-    logits, _, _ = srv._prefill(params, dict(tokens=jnp.asarray(prompts)))
+    logits, _, _ = srv._prefill(params, dict(
+        tokens=jnp.asarray(prompts),
+        lengths=jnp.asarray(prompt_lengths(prompts))))
     _, sub = jax.random.split(jax.random.PRNGKey(seed))
     expected = jax.random.categorical(sub, logits / temp, axis=-1)
     assert np.array_equal(got, np.asarray(expected))
@@ -190,18 +255,18 @@ def test_batch_path_first_sample_uses_split_subkey():
 # ---------------------------------------------------------------------------
 
 def test_no_discarded_decode_step():
-    api = _stub_api(eos_after=99, family="ssm")   # ssm -> batch path
+    api = _stub_api(eos_after=99)
     srv = Server(api, {}, ServeConfig(max_new_tokens=4))
-    out = srv.generate(np.full((1, 5), 7, np.int32))
+    out = srv.generate_batch(np.full((1, 5), 7, np.int32))
     # 4 tokens = 1 prefill sample + exactly 3 decodes (the old loop ran 4)
     assert srv.decode_calls == 3
     assert out.tolist() == [[8, 9, 10, 11]]
 
 
 def test_eos_short_circuits_batch_loop():
-    api = _stub_api(eos_after=2, family="ssm")
+    api = _stub_api(eos_after=2)
     srv = Server(api, {}, ServeConfig(max_new_tokens=8))
-    out = srv.generate(np.full((1, 5), 7, np.int32))
+    out = srv.generate_batch(np.full((1, 5), 7, np.int32))
     # tokens: 8, 9, EOS then frozen — only 2 decodes ever launched
     assert srv.decode_calls == 2
     assert out.tolist() == [[8, 9, EOS_ID] + [EOS_ID] * 5]
@@ -297,10 +362,104 @@ def test_scheduler_real_model_matches_single_request(dense):
         np.testing.assert_array_equal(solo.run()[srid], outs[rid])
 
 
-def test_scheduler_rejects_unsupported_family():
-    api = _stub_api(family="ssm")
-    with pytest.raises(ValueError, match="supports"):
+def test_bounded_state_requires_positive_cache_len():
+    """A position-bounded KV family misconfigured with max_cache_len=0
+    must fail loudly at construction, not decode into an empty cache."""
+    api = _stub_api()
+    api.cfg = api.cfg.with_(max_cache_len=0)
+    with pytest.raises(ValueError, match="max_cache_len"):
         ContinuousScheduler(api, {}, SchedulerConfig(batch=2, buckets=(8,)))
+
+
+def test_scheduler_rejects_unknown_state_kind_loudly():
+    """No silent fixed-batch fallback: a family whose registry caps name
+    an unknown DecodeState kind fails at construction."""
+    api = _stub_api(caps=ServeCaps(state_kind="mystery"))
+    with pytest.raises(ValueError, match="unknown serving family"):
+        ContinuousScheduler(api, {}, SchedulerConfig(batch=2, buckets=(8,)))
+
+
+# ---------------------------------------------------------------------------
+# DecodeState family matrix: all 7 registry architectures serve through the
+# continuous scheduler — bit-equal to the fixed-batch oracle, admit/evict/
+# backfill invariants, zero retraces after warmup on a host-local mesh.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", MATRIX_ARCHS)
+def test_family_matrix_continuous_serving(arch, family_model):
+    api, params = family_model(arch)
+    cfg = api.cfg
+    mesh = make_host_mesh(1, 1)
+    budget = 4
+    sched = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=budget), mesh=mesh)
+    rng = np.random.default_rng(13)
+
+    # warmup stream, then a 3x-slot-count backfill stream
+    warm_prompts = _rand_prompts(rng, 2, lo=3, hi=9)
+    stream_prompts = _rand_prompts(rng, 6, lo=3, hi=9)
+    prompts = warm_prompts + stream_prompts
+    extras = [_family_extra(cfg, rng) for _ in prompts]
+
+    rids = [sched.submit(p, extra=e)
+            for p, e in zip(warm_prompts, extras[:2])]
+    outs = dict(sched.run())
+    warm_traces = dict(sched.trace_counts)
+
+    rids += [sched.submit(p, extra=e)
+             for p, e in zip(stream_prompts, extras[2:])]
+    max_active = 0
+    while sched.num_active or sched.num_pending:
+        sched.step()
+        max_active = max(max_active, sched.num_active)
+    outs.update(sched.run())
+
+    # invariants: slot table never overflows, queue fully drained, every
+    # request terminated by budget or EOS, zero retraces after warmup
+    assert dict(sched.trace_counts) == warm_traces, arch
+    assert max_active <= 2
+    assert sched.num_active == 0 and sched.num_pending == 0
+    for rid in rids:
+        toks = outs[rid]
+        assert len(toks) == budget or toks[-1] == EOS_ID
+
+    # bit-equality against the fixed-batch oracle over the same rows
+    srv = Server(api, params, ServeConfig(max_new_tokens=budget))
+    width = max(len(p) for p in prompts)
+    rect = np.zeros((len(prompts), width), np.int32)
+    for i, p in enumerate(prompts):
+        rect[i, :len(p)] = p
+    extra = None
+    if extras[0] is not None:
+        extra = {k: np.stack([e[k] for e in extras])
+                 for k in extras[0]}
+    oracle = srv.generate_batch(rect, extra)
+    for i, rid in enumerate(rids):
+        got = outs[rid]
+        np.testing.assert_array_equal(
+            got, oracle[i][:len(got)], err_msg=f"{arch} row {i}")
+
+
+@pytest.mark.parametrize("arch", ["whisper-tiny", "llama-3.2-vision-11b"])
+def test_cross_families_validate_request_extras(arch, family_model):
+    api, params = family_model(arch)
+    sched = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=2))
+    with pytest.raises(ValueError, match="requires extras"):
+        sched.submit(np.full(4, 7, np.int32))          # missing frames
+    key = "frames" if api.cfg.family == "encdec" else "patches"
+    with pytest.raises(ValueError, match="shape"):
+        sched.submit(np.full(4, 7, np.int32),
+                     extra={key: np.zeros((3, 3), np.float32)})
+
+
+def test_token_family_rejects_stray_extras(dense):
+    api, params = dense
+    sched = ContinuousScheduler(api, params, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=2))
+    with pytest.raises(ValueError, match="requires extras"):
+        sched.submit(np.full(4, 7, np.int32),
+                     extra=dict(frames=np.zeros((2, 2), np.float32)))
 
 
 # ---------------------------------------------------------------------------
@@ -401,12 +560,12 @@ def test_paged_lazy_block_growth():
         paged=True, block_size=4))
     sched.submit(np.full(3, 7, np.int32))      # needs ceil(12/4) = 3 blocks
     sched._admit()
-    assert len(sched._blocks[0]) == 1          # prompt fits one block
+    assert len(sched.state._blocks[0]) == 1    # prompt fits one block
     peak = 1
     while sched.num_active:
         sched.step()
         if sched._active[0]:
-            peak = max(peak, len(sched._blocks[0]))
+            peak = max(peak, len(sched.state._blocks[0]))
     assert peak == 3                           # grew lazily to worst case
     assert sched.pool.live_blocks == 0         # all freed on eviction
 
@@ -418,7 +577,7 @@ def test_paged_dead_row_table_is_cleared():
         paged=True, block_size=8))
     sched.submit(np.full(5, 7, np.int32))
     sched.run()
-    assert (sched._table == 0).all()           # dead rows write to trash
+    assert (sched.state._table == 0).all()     # dead rows write to trash
 
 
 def test_paged_scheduler_decode_step_counts():
@@ -459,13 +618,40 @@ def test_paged_rejects_bad_configs():
     # capacity error names the bucket and the blocks required
     with pytest.raises(ValueError, match=r"bucket 8.*requires 4 KV blocks"):
         sched.submit(np.full(8, 7, np.int32), max_new_tokens=20)
-    api_ssm = _stub_api(family="ssm")
-    with pytest.raises(ValueError, match="supports"):
+    api_ssm = _stub_api(family="ssm", caps=ServeCaps(
+        state_kind="recurrent", positioned=False))
+    with pytest.raises(ValueError, match="paged KV serves"):
         ContinuousScheduler(api_ssm, {}, SchedulerConfig(
             batch=2, buckets=(8,), paged=True))
 
 
-def test_paged_server_rejects_batch_path_families():
+def test_paged_prefill_writes_bucket_covering_blocks():
+    """Paged prefill (ROADMAP item): the admission prefill runs against a
+    bucket-covering cache — blocks_for(bucket) * block_size positions —
+    not a max_cache_len stripe, and its K/V scatter straight into pool
+    blocks."""
+    api = _stub_api(eos_after=99)
+    sched = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8, 16), max_new_tokens=4,
+        paged=True, block_size=8))
+    assert sched.state.prefill_cache_len(8) == 8
+    assert sched.state.prefill_cache_len(16) == 16
+    # block_size 16 covers a 8-bucket with one 16-token block
+    sched16 = ContinuousScheduler(api, {}, SchedulerConfig(
+        batch=2, buckets=(8,), max_new_tokens=4,
+        paged=True, block_size=16))
+    assert sched16.state.prefill_cache_len(8) == 16
+    for p in _rand_prompts(np.random.default_rng(14), 4, lo=3, hi=16):
+        sched.submit(p)
+    sched.run()
+    # the compiled admission prefills are keyed by bucket-covering cache
+    # lengths, never by max_cache_len (64)
+    assert set(sched._prefill_fns) == {8, 16}
+
+
+def test_paged_rejects_recurrent_state_families():
+    """The paged slab replaces dict(k, v) KV stripes only; recurrent rows
+    (caps.paged=False) keep their dense layout and say so loudly."""
     cfg = smoke_config("mamba2-370m").with_(vocab_size=VOCAB)
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
