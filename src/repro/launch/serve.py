@@ -72,7 +72,15 @@ def main():
                          "slots; caps.paged families)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block for --paged")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="session-prefix caching on top of --paged: "
+                         "prompts whose leading blocks are already "
+                         "resident share them copy-free (refcounted) and "
+                         "prefill only the divergent tail")
     args = ap.parse_args()
+    if args.prefix_cache and not args.paged:
+        ap.error("--prefix-cache requires --paged (it shares blocks of "
+                 "the paged KV pool)")
     if args.batch and args.continuous:
         ap.error("--batch and --continuous are mutually exclusive")
 
@@ -138,7 +146,8 @@ def main():
         batch=slots, buckets=(16, 32, 64),
         max_new_tokens=args.max_new_tokens,
         temperature=args.temperature, paged=args.paged,
-        block_size=args.block_size), metrics=metrics)
+        block_size=args.block_size,
+        prefix_cache=args.prefix_cache), metrics=metrics)
     rids = []
     for i in range(n_req):
         row = pipe.batch_at(0, i % slots)["tokens"]
@@ -160,6 +169,12 @@ def main():
               "{unit} live ({kv_util_peak:.0%}), peak resident "
               "{kv_peak_resident_bytes} bytes".format(
                   unit="blocks" if args.paged else "rows", **summ))
+    if args.prefix_cache:
+        print("prefix cache: {prefix_hit_rate:.0%} hit rate, "
+              "{prefix_blocks_reused} blocks reused, "
+              "{prefill_tokens_skipped} prefill tokens skipped, "
+              "mean TTFT hit {mean_ttft_hit_s:.4f}s vs miss "
+              "{mean_ttft_miss_s:.4f}s".format(**summ))
     print(f"jit traces: {dict(sched.trace_counts)} "
           f"(prefills={sched.prefills}, decode_steps="
           f"{sched.decode_steps})")

@@ -18,6 +18,11 @@ Serving contract (the continuous-batching decode path):
     admission prefills into a bucket-covering cache instead of a full
     ``max_cache_len`` stripe. The other families (never paged) always
     allocate their ``max_cache_len`` layout.
+  * dense/moe ``prefill`` also honours ``batch["prefix_kv"]`` (a
+    pre-populated dict(k, v) cache) + ``batch["start"]`` (traced scalar
+    tail offset) for serve-side prefix sharing: ``tokens`` is then only
+    the divergent tail, the forward runs at ``cache_index=start``, and
+    ``index`` comes back absolute (``start + lengths``).
   * ``decode_step``'s ``index`` is a scalar (all rows at the same depth)
     or a per-row (B,) array of absolute positions; the per-row form writes
     each row's K/V at its own cache slot and masks keys past its own
@@ -105,7 +110,8 @@ def get_model(cfg: ModelConfig, mesh=None,
             prefill=lambda p, b: transformer.prefill(
                 p, b["tokens"], cfg, rules,
                 max_cache_len=b.get("cache_len") or cfg.max_cache_len,
-                mesh=mesh, lengths=b.get("lengths")),
+                mesh=mesh, lengths=b.get("lengths"),
+                cache=b.get("prefix_kv"), start=b.get("start")),
             decode_step=lambda p, tok, st, i: transformer.decode_step(
                 p, tok, st, i, cfg, rules, mesh),
             batch_keys=("tokens", "targets", "loss_mask"),

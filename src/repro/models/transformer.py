@@ -159,7 +159,8 @@ def loss_fn(params, batch, cfg: ModelConfig, rules: ShardingRules, mesh=None):
 
 
 def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
-            max_cache_len: int, mesh=None, lengths=None):
+            max_cache_len: int, mesh=None, lengths=None, cache=None,
+            start=None):
     """Process a prompt, filling the KV cache. Returns (last_logits, cache,
     next_index).
 
@@ -169,18 +170,29 @@ def prefill(params, tokens, cfg: ModelConfig, rules: ShardingRules, *,
     own last *real* position and return per-row next indices — decode then
     overwrites/masks the stale pad K/V via per-row cache positions. Without
     ``lengths`` all rows share the compiled prompt length (next_index = s).
+
+    ``cache``/``start`` enable tail-only prefill over a pre-populated
+    cache (serve-side prefix sharing): positions ``0..start-1`` of
+    ``cache`` already hold valid K/V for this prompt, ``tokens`` is only
+    the divergent tail, and the forward runs at ``cache_index=start`` —
+    RoPE phases, causal masks, and K/V writes all offset to absolute
+    positions. ``lengths`` then count *tail* tokens and next_index comes
+    back absolute (``start + lengths``). ``start`` may be a traced scalar
+    (one compile serves every split point).
     """
     b, s = tokens.shape
-    cache = L.init_kv_cache(cfg, b, max_cache_len)
+    if cache is None:
+        cache = L.init_kv_cache(cfg, b, max_cache_len)
+    base = 0 if start is None else start
     hidden, cache = forward(params, tokens, cfg, rules, cache=cache,
-                            cache_index=0, mesh=mesh)
+                            cache_index=base, mesh=mesh)
     if lengths is None:
         logits = logits_of(params, hidden[:, -1:], cfg, rules)
-        return logits[:, 0], cache, s
+        return logits[:, 0], cache, base + s
     li = jnp.asarray(lengths, jnp.int32)
     last = hidden[jnp.arange(b), li - 1]          # (B, D) per-row last real
     logits = logits_of(params, last[:, None], cfg, rules)
-    return logits[:, 0], cache, li
+    return logits[:, 0], cache, base + li
 
 
 def decode_step(params, token, cache, index, cfg: ModelConfig,

@@ -19,20 +19,26 @@
 * ``metrics`` — ``ServeMetrics``: submit/admit/first-token/finish
   timestamps, tokens/sec and p50/p99 latency + TTFT, plus state-residency
   (live blocks or rows / total) and peak-resident bytes.
-* ``paged`` — ``BlockPool``: the paged-KV block slab + free-list
-  allocator behind ``PagedKVState`` (``SchedulerConfig.paged``); long and
-  short requests share fixed blocks instead of per-slot ``max_cache_len``
-  stripes.
+* ``paged`` — ``BlockPool``: the paged-KV block slab + refcounted
+  free-list allocator behind ``PagedKVState`` (``SchedulerConfig.paged``);
+  long and short requests share fixed blocks instead of per-slot
+  ``max_cache_len`` stripes. With ``SchedulerConfig.prefix_cache`` the
+  pool also runs **session-prefix caching**: prompt blocks resident under
+  an identical prefix (chained content hashes) are mapped into new
+  requests copy-free, boundary blocks are duplicated copy-on-write, and
+  admission prefills only the divergent tail.
 """
 from .serve_loop import Server, ServeConfig, prompt_lengths
 from .scheduler import ContinuousScheduler, SchedulerConfig, Request
 from .cache import (DecodeState, DenseKVState, PagedKVState, RecurrentState,
                     HybridState, CrossAttnState, make_decode_state)
 from .metrics import ServeMetrics
-from .paged import BlockPool, blocks_for
+from .paged import (BlockPool, PrefixPlan, blocks_for, chain_hash,
+                    prefix_hashes)
 
 __all__ = ["Server", "ServeConfig", "prompt_lengths",
            "ContinuousScheduler", "SchedulerConfig", "Request",
            "DecodeState", "DenseKVState", "PagedKVState", "RecurrentState",
            "HybridState", "CrossAttnState", "make_decode_state",
-           "ServeMetrics", "BlockPool", "blocks_for"]
+           "ServeMetrics", "BlockPool", "PrefixPlan", "blocks_for",
+           "chain_hash", "prefix_hashes"]

@@ -50,7 +50,8 @@ import numpy as np
 
 from ..dist.sharding import tree_shardings
 from ..models.registry import ModelApi
-from .paged import BlockPool, blocks_for
+from .paged import (BlockPool, PrefixPlan, PREFIX_SEED, blocks_for,
+                    prefix_hashes)
 
 
 def _uncounted(name, fn):
@@ -164,16 +165,35 @@ class DecodeState:
                          budget: int) -> None:
         pass
 
-    def can_admit(self, prompt_len: int, budget: int) -> bool:
+    def prefix_plan(self, tokens, budget: int):
+        """Prefix-cache admission plan for one request, or None when the
+        state does not share prefixes (everything but ``PagedKVState``
+        with ``cfg.prefix_cache``)."""
+        return None
+
+    def can_admit(self, prompt_len: int, budget: int, plan=None) -> bool:
         return True
 
-    def admit(self, slot: int, prompt_len: int, budget: int) -> None:
+    def admit(self, slot: int, prompt_len: int, budget: int,
+              plan=None) -> None:
         pass
 
-    def prefill_cache_len(self, bucket: int) -> int | None:
-        """Static cache length for the admission prefill; None keeps the
-        family default (``max_cache_len``)."""
+    def prefill_cache_len(self, cover: int) -> int | None:
+        """Static cache length for an admission prefill that must hold
+        positions ``0..cover-1`` (= prefill start offset + tail bucket;
+        start is 0 without prefix sharing, so this is the bucket length).
+        None keeps the family default (``max_cache_len``)."""
         return None
+
+    def prefill_prefix_inputs(self, plan, cache_len: int | None) -> dict:
+        """Extra prefill-batch inputs realizing ``plan`` (resident-prefix
+        gather spec + tail start offset); empty without a prefix hit."""
+        return {}
+
+    def referenced(self, num_active: int) -> int:
+        """Total state-unit references across requests (== live units
+        unless the state shares blocks between requests)."""
+        return self.occupancy(num_active)[0]
 
     def _insert_fn(self, state, row_state, slot):
         return jax.tree.map(
@@ -265,7 +285,19 @@ class PagedKVState(DenseKVState):
     bucket-covering cache (``blocks_for(bucket) * block_size`` positions,
     not ``max_cache_len``) and its K/V blocks are scattered straight into
     the pool — the only dense intermediate is the prompt-sized K/V that
-    flash attention needs anyway."""
+    flash attention needs anyway.
+
+    With ``cfg.prefix_cache`` admission first consults the pool's chained
+    content-hash registry (``prefix_plan``): prompt blocks already
+    resident under an identical prefix are mapped copy-free (refcount
+    bump, reservation shrinks by the match), a partially-covered boundary
+    block is **copied** out of its donor before anything is written
+    (copy-on-write — a shared block is never scattered into), and the
+    admission prefill computes only the divergent tail: the matched
+    prefix K/V is gathered from the slab into the prefill cache and the
+    model runs from ``start`` with RoPE positions offset accordingly. The
+    last prompt token is always re-prefilled (its logits sample token 0),
+    so a full-prompt match still runs a one-token tail."""
 
     def __init__(self, api, cfg, params, mesh=None, counted=None):
         if api.cfg.max_cache_len % cfg.block_size != 0:
@@ -303,6 +335,7 @@ class PagedKVState(DenseKVState):
         self.batch = batch
         self._blocks: list[list[int]] = [[] for _ in range(batch)]
         self._reserved = np.zeros(batch, np.int32)
+        self._shared = np.zeros(batch, np.int32)   # leading shared blocks
         self._table = np.zeros((batch, self._max_blocks), np.int32)
         state = dict(self.pool.init_slab())
         for path, leaf in _leaf_paths(self._row_shapes):
@@ -338,27 +371,101 @@ class PagedKVState(DenseKVState):
                 f"{self.pool.block_size} tokens, but the pool holds "
                 f"only {self.pool.capacity} blocks total")
 
-    def can_admit(self, prompt_len: int, budget: int) -> bool:
-        return self.pool.can_reserve(
-            self.pool.blocks_needed(prompt_len, budget))
+    def prefix_plan(self, tokens, budget: int) -> PrefixPlan | None:
+        """Match the prompt against the pool's chained-hash registry.
 
-    def admit(self, slot: int, prompt_len: int, budget: int) -> None:
+        Pure planning — no pool side effects (the scheduler may still
+        drop the request if it terminates at admission); ``admit``
+        realizes the plan. Matching walks leading *full* prompt blocks
+        through ``lookup`` but never past ``(prompt_len - 1) //
+        block_size``: the block holding the last prompt token is always
+        owned and re-prefilled (its logits sample token 0, and sharing it
+        would mean writing a block another request references). When every
+        block before that boundary matched, a resident donor covering the
+        boundary tokens (an aligned full block, or a registered block
+        extending the matched chain) is recorded for copy-on-write."""
+        if not getattr(self.cfg, "prefix_cache", False):
+            return None
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        n, bs = len(toks), self.cfg.block_size
+        hashes = prefix_hashes(toks, bs)
+        limit = (n - 1) // bs             # first block the request writes
+        shared: list[int] = []
+        while len(shared) < min(len(hashes), limit):
+            blk = self.pool.lookup(hashes[len(shared)])
+            if blk is None:
+                break
+            shared.append(blk)
+        m = len(shared)
+        cow = None
+        if m == limit and m * bs < n - 1:
+            if m < len(hashes):           # boundary is itself a full block
+                cow = self.pool.lookup(hashes[m])
+            if cow is None:
+                parent = hashes[m - 1] if m else PREFIX_SEED
+                cow = self.pool.find_extension(parent, toks[m * bs:n - 1])
+        start = n - 1 if cow is not None else m * bs
+        return PrefixPlan(shared=shared, cow=cow, start=start,
+                          hashes=hashes, tokens=toks)
+
+    def can_admit(self, prompt_len: int, budget: int, plan=None) -> bool:
         need = self.pool.blocks_needed(prompt_len, budget)
+        if plan is not None:
+            need -= len(plan.shared)      # shared blocks are already resident
+        return self.pool.can_reserve(need)
+
+    def admit(self, slot: int, prompt_len: int, budget: int,
+              plan=None) -> None:
+        bs = self.cfg.block_size
+        shared = list(plan.shared) if plan is not None else []
+        m = len(shared)
+        # reservation covers only blocks this request will own: the shared
+        # prefix is resident already, so its capacity is counted once
+        need = self.pool.blocks_needed(prompt_len, budget) - m
         self.pool.reserve(need)
         self._reserved[slot] = need
-        ids = [self.pool.take()
-               for _ in range(blocks_for(prompt_len, self.cfg.block_size))]
+        for blk in shared:
+            self.pool.share(blk)
+        ids = shared + [self.pool.take()
+                        for _ in range(blocks_for(prompt_len, bs) - m)]
         self._blocks[slot] = ids
+        self._shared[slot] = m
         self._table[slot, :] = 0
         self._table[slot, :len(ids)] = ids
+        if plan is not None:
+            # publish this request's owned full prompt blocks for future
+            # sharers (first registration of a hash wins)
+            for j in range(m, len(plan.hashes)):
+                parent = plan.hashes[j - 1] if j else PREFIX_SEED
+                self.pool.register(plan.hashes[j], parent, ids[j],
+                                   plan.tokens[j * bs:(j + 1) * bs])
 
     # -- paged prefill insert ----------------------------------------------
 
-    def prefill_cache_len(self, bucket: int) -> int | None:
-        """Bucket-covering cache for the admission prefill: the row K/V
+    def prefill_cache_len(self, cover: int) -> int | None:
+        """Block-covering cache for the admission prefill: the row K/V
         comes back already block-shaped, so the insert is a pure scatter
-        into the pool (the ROADMAP "paged prefill" item)."""
-        return blocks_for(bucket, self.cfg.block_size) * self.cfg.block_size
+        into the pool (the ROADMAP "paged prefill" item). ``cover`` is
+        prefill start + tail bucket — just the bucket length without
+        prefix sharing."""
+        return blocks_for(cover, self.cfg.block_size) * self.cfg.block_size
+
+    def prefill_prefix_inputs(self, plan, cache_len: int | None) -> dict:
+        """Prefill-batch inputs that realize a prefix hit: the tail start
+        offset plus the block ids whose slab content is gathered into the
+        prefill cache before the model runs (shared prefix, then the COW
+        donor — gathering the donor and scattering the boundary back into
+        an *owned* block is the copy-on-write duplication)."""
+        if plan is None or (not plan.shared and plan.cow is None):
+            return {}
+        nb = cache_len // self.cfg.block_size
+        ids = np.zeros(nb, np.int32)
+        ids[:len(plan.shared)] = plan.shared
+        if plan.cow is not None:
+            ids[len(plan.shared)] = plan.cow
+        return dict(start=jnp.int32(plan.start),
+                    prefix_ids=jnp.asarray(ids),
+                    pool_k=self.data["k"], pool_v=self.data["v"])
 
     def _insert_fn(self, state, row_state, slot, ids):
         """Scatter a prefilled row into the shared slab: K/V go to the
@@ -385,9 +492,14 @@ class PagedKVState(DenseKVState):
     def prefill_insert(self, row_state, slot: int, length: int,
                        bucket: int) -> None:
         ids = self._blocks[slot]
-        nb = blocks_for(bucket, self.cfg.block_size)
+        # the returned row cache is block-shaped by construction; its own
+        # position extent (cache_len, = cover for prefix tails) names the
+        # scatter width — shared prefix blocks scatter to the trash block
+        # so a block another request references is never written
+        nb = row_state["k"].shape[3] // self.cfg.block_size
+        m = int(self._shared[slot])
         bucket_ids = np.zeros(nb, np.int32)
-        bucket_ids[:len(ids)] = ids
+        bucket_ids[m:len(ids)] = ids[m:]
         self.data = self._insert(self.data, row_state, jnp.int32(slot),
                                  jnp.asarray(bucket_ids))
 
@@ -408,17 +520,29 @@ class PagedKVState(DenseKVState):
         return self.data
 
     def evict(self, slot: int) -> None:
+        """Drop one reference per mapped block (shared blocks survive for
+        their other sharers; blocks reaching refcount 0 return to the free
+        list) and cancel the unused tail of the reservation — which only
+        ever covered *owned* blocks, so the shared count is excluded."""
+        m = int(self._shared[slot])
+        owned = len(self._blocks[slot]) - m
         self.pool.free(self._blocks[slot])
-        self.pool.cancel(int(self._reserved[slot]) - len(self._blocks[slot]))
+        self.pool.cancel(int(self._reserved[slot]) - owned)
         self._blocks[slot] = []
         self._reserved[slot] = 0
+        self._shared[slot] = 0
         self._table[slot, :] = 0     # dead-row writes -> trash block
 
     # -- metrics -----------------------------------------------------------
 
     def occupancy(self, num_active: int) -> tuple[int, int, int]:
+        """live counts *unique* resident blocks: a block shared by five
+        requests pins its bytes once — that is the whole point."""
         return (self.pool.live_blocks, self.pool.capacity,
                 self.pool.block_bytes)
+
+    def referenced(self, num_active: int) -> int:
+        return self.pool.referenced_blocks
 
 
 _KINDS = {
@@ -441,6 +565,11 @@ def make_decode_state(api: ModelApi, cfg, params, mesh=None,
             f"unknown serving family {api.cfg.family!r} (state kind "
             f"{kind!r}); known kinds: {sorted(_KINDS)} — declare "
             "ServeCaps in models/registry.py for new families")
+    if getattr(cfg, "prefix_cache", False) and not cfg.paged:
+        raise ValueError(
+            "prefix_cache=True requires paged=True: prefix sharing maps "
+            "resident pool blocks into new requests' block tables, which "
+            "only exist in paged mode")
     if cfg.paged:
         if not caps.paged:
             raise ValueError(

@@ -22,6 +22,10 @@ class RequestTiming:
     finish: float | None = None
     tokens: int = 0
     prompt_len: int = 0
+    # prefix-cache accounting (paged + prefix_cache only)
+    prefix_blocks_reused: int = 0    # resident blocks mapped copy-free
+    prefill_tokens_skipped: int = 0  # prompt tokens served from resident K/V
+    prefix_hit: bool = False
 
 
 def _percentile(xs: list[float], q: float) -> float:
@@ -44,19 +48,40 @@ class ServeMetrics:
     kv_live_blocks: int = 0          # last sample
     kv_live_blocks_peak: int = 0
     kv_block_bytes: int = 0
+    kv_referenced_peak: int = 0      # total refs (shared counted per sharer)
 
     def _rec(self, rid: int) -> RequestTiming:
         return self.requests.setdefault(rid, RequestTiming())
 
     def record_kv_usage(self, live_blocks: int, total_blocks: int,
-                        block_bytes: int) -> None:
+                        block_bytes: int, referenced: int | None = None)\
+            -> None:
         """One occupancy sample: ``live_blocks`` of ``total_blocks`` are
-        allocated to in-flight requests, each ``block_bytes`` on device."""
+        allocated to in-flight requests, each ``block_bytes`` on device.
+
+        ``live_blocks`` counts *unique* resident blocks — a block five
+        requests share pins its bytes once, so ``kv_peak_resident_bytes``
+        stays honest under prefix sharing. ``referenced`` is the total
+        reference count across requests (shared blocks counted per
+        sharer); ``referenced - live`` is the capacity sharing saved."""
         self.kv_live_blocks = int(live_blocks)
         self.kv_total_blocks = int(total_blocks)
         self.kv_block_bytes = int(block_bytes)
         self.kv_live_blocks_peak = max(self.kv_live_blocks_peak,
                                        int(live_blocks))
+        self.kv_referenced_peak = max(
+            self.kv_referenced_peak,
+            int(live_blocks if referenced is None else referenced))
+
+    def record_prefix(self, rid: int, blocks_reused: int = 0,
+                      tokens_skipped: int = 0) -> None:
+        """Prefix-cache outcome for one admission: how many resident
+        blocks were mapped copy-free and how many prompt tokens the tail
+        prefill skipped. Zero/zero = a miss (cold prefill)."""
+        r = self._rec(rid)
+        r.prefix_blocks_reused = int(blocks_reused)
+        r.prefill_tokens_skipped = int(tokens_skipped)
+        r.prefix_hit = blocks_reused > 0 or tokens_skipped > 0
 
     def record_submit(self, rid: int, prompt_len: int = 0) -> None:
         r = self._rec(rid)
@@ -84,6 +109,32 @@ class ServeMetrics:
             kv_total_blocks=self.kv_total_blocks,
             kv_peak_resident_bytes=self.kv_live_blocks_peak
             * self.kv_block_bytes,
+            kv_referenced_peak=self.kv_referenced_peak,
+        )
+
+    def _prefix_summary(self) -> dict:
+        """Prefix-cache rollup. The hit/miss TTFT split measures admit ->
+        first token (the prefill the request actually ran), not submit ->
+        first token: queue wait before admission would otherwise drown the
+        prefill saving for requests admitted late in the stream."""
+        admitted = [r for r in self.requests.values()
+                    if r.admit is not None]
+        hits = [r for r in admitted if r.prefix_hit]
+        misses = [r for r in admitted if not r.prefix_hit]
+
+        def mean_ttft(rs):
+            xs = [r.first_token - r.admit for r in rs
+                  if r.first_token is not None]
+            return sum(xs) / len(xs) if xs else 0.0
+
+        return dict(
+            prefix_hit_rate=len(hits) / len(admitted) if admitted else 0.0,
+            prefix_blocks_reused=sum(r.prefix_blocks_reused
+                                     for r in admitted),
+            prefill_tokens_skipped=sum(r.prefill_tokens_skipped
+                                       for r in admitted),
+            mean_ttft_hit_s=mean_ttft(hits),
+            mean_ttft_miss_s=mean_ttft(misses),
         )
 
     def summary(self) -> dict:
@@ -93,7 +144,7 @@ class ServeMetrics:
             return dict(requests=0, tokens=total_tokens,
                         tokens_per_sec=0.0, p50_latency_s=0.0,
                         p99_latency_s=0.0, p50_ttft_s=0.0, p99_ttft_s=0.0,
-                        **self._kv_summary())
+                        **self._kv_summary(), **self._prefix_summary())
         t0 = min(r.submit for r in done if r.submit is not None)
         t1 = max(r.finish for r in done)
         wall = max(t1 - t0, 1e-9)
@@ -113,4 +164,5 @@ class ServeMetrics:
             p50_ttft_s=_percentile(ttft, 50),
             p99_ttft_s=_percentile(ttft, 99),
             **self._kv_summary(),
+            **self._prefix_summary(),
         )

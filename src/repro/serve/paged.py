@@ -16,7 +16,8 @@ Layout and invariants:
   allocated, every cleared block-table entry points at it, and the
   scheduler's garbage writes for inactive rows land there — a freed block
   can be handed to a new request the same step without any risk that a
-  dead row still scribbles on it.
+  dead row still scribbles on it. ``free`` rejects it loudly, so the
+  trash block can never leak into the free list.
 * Allocation is a LIFO free list — O(1) ``take`` / O(k) ``free`` of k
   blocks, no search, no compaction. Blocks are interchangeable, so there
   is no external fragmentation by construction: any free block serves any
@@ -32,14 +33,36 @@ Layout and invariants:
   (``max_cache_len / block_size``); unallocated entries are 0 (trash), so
   gathering through the table always reads in-bounds memory and per-row
   ``kv_len`` masking makes the trash contribution exactly zero.
+
+**Prefix sharing (session-prefix caching).** Every allocated block carries
+a refcount: ``take`` starts it at 1, ``share`` bumps it for each request
+that maps an already-resident block into its table copy-free, and ``free``
+only returns a block to the free list when the count reaches 0 —
+double-frees and underflows raise loudly instead of corrupting the free
+list. A block whose content is the K/V of a *full* block of prompt tokens
+under a known prefix can be **registered** under a chained content hash
+(``h_i = blake2b(h_{i-1} || tokens_i)``, rooted at a fixed seed), so a
+block is only ever matched when the ENTIRE token prefix before it is
+identical — which makes absolute positions (and therefore RoPE phases)
+line up by construction. ``lookup`` resolves a chain hash to a resident
+block; ``find_extension`` resolves a *partial* boundary block (a resident
+block whose leading tokens extend a matched chain) for copy-on-write
+duplication. Registration dies with the block: when its refcount reaches
+0 the hash entries are dropped before the block re-enters the free list.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import hashlib
+from dataclasses import dataclass, field
 
+import numpy as np
 import jax.numpy as jnp
 
 from ..models.config import ModelConfig
+
+# Root of every prefix hash chain. Versioned so a future layout change
+# cannot alias stale hashes.
+PREFIX_SEED = b"repro-prefix-cache-v1"
 
 
 def blocks_for(positions: int, block_size: int) -> int:
@@ -47,13 +70,63 @@ def blocks_for(positions: int, block_size: int) -> int:
     return max(0, -(-int(positions) // int(block_size)))
 
 
+def chain_hash(parent: bytes, tokens) -> bytes:
+    """One link of the prefix hash chain: ``blake2b(parent || tokens)``.
+
+    Chaining means a block's hash commits to every token before it, not
+    just its own ``block_size`` tokens — two requests only collide on a
+    hash when their prompts are identical up to and including that block.
+    """
+    h = hashlib.blake2b(parent, digest_size=16)
+    h.update(np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes())
+    return h.digest()
+
+
+def prefix_hashes(tokens, block_size: int) -> list[bytes]:
+    """Chained hashes of the *full* blocks covering ``tokens`` (the
+    trailing partial block, if any, has no hash — only a block whose
+    every position is pinned by prompt tokens is content-addressable)."""
+    toks = np.asarray(tokens, np.int32).reshape(-1)
+    out: list[bytes] = []
+    prev = PREFIX_SEED
+    for j in range(len(toks) // block_size):
+        prev = chain_hash(prev, toks[j * block_size:(j + 1) * block_size])
+        out.append(prev)
+    return out
+
+
+@dataclass
+class PrefixPlan:
+    """Host-side admission plan for one request against the prefix cache.
+
+    ``shared`` blocks are mapped copy-free (refcount bump, never written);
+    ``cow`` names a resident donor block whose content covers the boundary
+    block — it is *copied* into a freshly owned block before the request
+    scatters anything into it (copy-on-write). ``start`` is the first
+    prompt position the tail prefill actually computes; everything before
+    it is served from resident K/V.
+    """
+    shared: list[int]
+    cow: int | None
+    start: int
+    hashes: list[bytes] = field(repr=False)
+    tokens: np.ndarray = field(repr=False)
+
+    @property
+    def blocks_reused(self) -> int:
+        return len(self.shared) + (1 if self.cow is not None else 0)
+
+
 class BlockPool:
-    """Free-list allocator over a fixed slab of KV blocks.
+    """Refcounted free-list allocator over a fixed slab of KV blocks.
 
     ``num_blocks`` counts *allocatable* blocks; the slab carries one extra
     row (block 0, the trash block) that is never handed out. Reservations
     (``reserve``/``cancel``) set aside capacity without choosing blocks;
-    ``take`` converts one reserved unit into a concrete block id.
+    ``take`` converts one reserved unit into a concrete block id at
+    refcount 1, ``share`` adds a reference to a resident block, and
+    ``free`` drops one reference per listed block — a block re-enters the
+    free list only at refcount 0.
     """
 
     def __init__(self, *, num_blocks: int, block_size: int,
@@ -72,6 +145,14 @@ class BlockPool:
         # LIFO free list: freshly freed blocks are reused first (warm HBM).
         self._free: list[int] = list(range(self.num_blocks, 0, -1))
         self._reserved = 0
+        # per-block reference counts (index 0 = trash, always 0)
+        self._refs = np.zeros(self.num_blocks + 1, np.int64)
+        # content-hash registry: chain hash -> resident block id, plus the
+        # reverse/edge maps needed to unregister and to find COW donors
+        self._hash_to_block: dict[bytes, int] = {}
+        self._block_hash: dict[int, tuple[bytes, bytes]] = {}
+        self._block_tokens: dict[int, np.ndarray] = {}
+        self._children: dict[bytes, set[int]] = {}
 
     @classmethod
     def for_model(cls, cfg: ModelConfig, *, num_blocks: int,
@@ -95,8 +176,18 @@ class BlockPool:
 
     @property
     def live_blocks(self) -> int:
-        """Blocks currently allocated to requests (written or writable)."""
+        """*Unique* blocks currently resident (shared blocks count once)."""
         return self.num_blocks - len(self._free)
+
+    @property
+    def referenced_blocks(self) -> int:
+        """Total block references across requests (shared blocks count once
+        per sharer) — ``referenced_blocks - live_blocks`` is the capacity
+        prefix sharing is saving right now."""
+        return int(self._refs.sum())
+
+    def refcount(self, block_id: int) -> int:
+        return int(self._refs[int(block_id)])
 
     @property
     def block_bytes(self) -> int:
@@ -114,6 +205,34 @@ class BlockPool:
         ``0..prompt_len-1`` and decode writes ``prompt_len..prompt_len +
         budget - 2`` (the final sampled token is never cached)."""
         return blocks_for(prompt_len + budget - 1, self.block_size)
+
+    def check_invariants(self) -> None:
+        """Allocator self-check, used by the property tests: free list +
+        live blocks partition capacity, refcounts agree with residency,
+        and the trash block is neither free nor referenced."""
+        if len(set(self._free)) != len(self._free):
+            raise AssertionError(f"duplicate ids in free list: {self._free}")
+        if 0 in self._free:
+            raise AssertionError("trash block 0 leaked into the free list")
+        if len(self._free) + self.live_blocks != self.capacity:
+            raise AssertionError(
+                f"free ({len(self._free)}) + live ({self.live_blocks}) "
+                f"!= capacity ({self.capacity})")
+        if self._refs[0] != 0:
+            raise AssertionError("trash block 0 has a nonzero refcount")
+        free = set(self._free)
+        for blk in range(1, self.num_blocks + 1):
+            if (blk in free) != (self._refs[blk] == 0):
+                raise AssertionError(
+                    f"block {blk}: refcount {int(self._refs[blk])} "
+                    f"disagrees with free-list membership")
+        for h, blk in self._hash_to_block.items():
+            if self._refs[blk] == 0:
+                raise AssertionError(
+                    f"hash registry holds dead block {blk}")
+        if not 0 <= self._reserved <= len(self._free):
+            raise AssertionError(
+                f"{self._reserved} reserved with {len(self._free)} free")
 
     # -- reservation + allocation -----------------------------------------
 
@@ -135,21 +254,108 @@ class BlockPool:
         self._reserved -= n
 
     def take(self) -> int:
-        """Convert one reserved unit into a concrete block id. O(1)."""
+        """Convert one reserved unit into a concrete block id at refcount
+        1. O(1). Never returns block 0 (the trash block)."""
         if self._reserved <= 0:
             raise ValueError("take() without a reservation")
         if not self._free:  # unreachable while reservations are honest
             raise ValueError("free list empty with reservations outstanding")
         self._reserved -= 1
-        return self._free.pop()
+        blk = self._free.pop()
+        self._refs[blk] = 1
+        return blk
+
+    def share(self, block_id: int) -> None:
+        """Add one reference to an already-resident block (prefix hit:
+        the block is mapped into another request's table copy-free)."""
+        blk = int(block_id)
+        if not 1 <= blk <= self.num_blocks:
+            raise ValueError(f"block id {blk} out of range")
+        if self._refs[blk] < 1:
+            raise ValueError(
+                f"share() on non-resident block {blk} (refcount 0)")
+        self._refs[blk] += 1
 
     def free(self, block_ids) -> None:
-        """Return allocated blocks to the pool. O(k)."""
+        """Drop one reference per listed block; blocks reaching refcount 0
+        are unregistered from the prefix index and returned to the free
+        list. Double-frees raise instead of corrupting the free list, and
+        block 0 (the trash block) is never accepted."""
         for blk in block_ids:
             blk = int(blk)
+            if blk == 0:
+                raise ValueError(
+                    "free() on block 0: the trash block is never allocated "
+                    "and never freed")
             if not 1 <= blk <= self.num_blocks:
                 raise ValueError(f"block id {blk} out of range")
-            self._free.append(blk)
+            if self._refs[blk] <= 0:
+                raise ValueError(
+                    f"refcount underflow on block {blk}: double free (block "
+                    "is already on the free list)")
+            self._refs[blk] -= 1
+            if self._refs[blk] == 0:
+                self._unregister(blk)
+                self._free.append(blk)
+
+    # -- prefix-hash registry ----------------------------------------------
+
+    def register(self, h: bytes, parent: bytes, block_id: int,
+                 tokens) -> bool:
+        """Publish a resident block as the K/V of one full block of prompt
+        tokens under chain hash ``h`` (``parent`` = the chain hash before
+        it). First registration wins; returns False if ``h`` is already
+        claimed. The block must be resident — its registration is dropped
+        automatically when its refcount reaches 0."""
+        blk = int(block_id)
+        if self._refs[blk] < 1:
+            raise ValueError(
+                f"register() on non-resident block {blk} (refcount 0)")
+        if h in self._hash_to_block:
+            return False
+        if blk in self._block_hash:      # one hash per block
+            return False
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        if len(toks) != self.block_size:
+            raise ValueError(
+                f"register() needs exactly {self.block_size} tokens "
+                f"(a full block), got {len(toks)}")
+        self._hash_to_block[h] = blk
+        self._block_hash[blk] = (h, parent)
+        self._block_tokens[blk] = toks.copy()
+        self._children.setdefault(parent, set()).add(blk)
+        return True
+
+    def lookup(self, h: bytes) -> int | None:
+        """Resident block holding the full block of tokens whose chain
+        hash is ``h``, or None."""
+        return self._hash_to_block.get(h)
+
+    def find_extension(self, parent: bytes, tokens) -> int | None:
+        """A resident registered block that *extends* chain ``parent`` and
+        whose leading tokens equal ``tokens`` — the COW donor for a
+        request whose prompt ends inside a block some earlier request
+        filled completely. Returns None when no such block exists."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        if not 0 < len(toks) <= self.block_size:
+            return None
+        for blk in self._children.get(parent, ()):
+            if np.array_equal(self._block_tokens[blk][:len(toks)], toks):
+                return blk
+        return None
+
+    def _unregister(self, blk: int) -> None:
+        entry = self._block_hash.pop(blk, None)
+        if entry is None:
+            return
+        h, parent = entry
+        self._hash_to_block.pop(h, None)
+        self._block_tokens.pop(blk, None)
+        kids = self._children.get(parent)
+        if kids is not None:
+            kids.discard(blk)
+            if not kids:
+                del self._children[parent]
 
     # -- device slab -------------------------------------------------------
 

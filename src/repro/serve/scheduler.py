@@ -83,6 +83,9 @@ class SchedulerConfig:
     num_blocks: int | None = None          # allocatable blocks; default
     #                                        batch * max_cache_len/block_size
     #                                        (dense-equivalent capacity)
+    # session-prefix caching (requires paged): refcounted sharing of
+    # resident prompt blocks + tail-only prefill (see serve/paged.py)
+    prefix_cache: bool = False
 
 
 class ContinuousScheduler:
@@ -184,7 +187,15 @@ class ContinuousScheduler:
         """The jitted admission prefill for a static cache length (paged
         admission prefills into a bucket-covering cache; None keeps the
         family default). One python callable per cache length, all bumping
-        the shared 'prefill' trace counter."""
+        the shared 'prefill' trace counter.
+
+        Prefix-hit admissions carry ``prefix_ids``/``pool_k``/``pool_v``
+        (the resident blocks to reuse) plus a traced ``start``: the shared
+        blocks are gathered out of the slab into the prefill cache, so the
+        model computes only the divergent tail — with the COW donor block
+        gathered like any other, the boundary block's content rides the
+        normal scatter into a freshly owned block (the copy of
+        copy-on-write costs one extra block id in the gather)."""
         fn = self._prefill_fns.get(cache_len)
         if fn is None:
             sample = self._sample
@@ -193,6 +204,19 @@ class ContinuousScheduler:
                 b = dict(batch)
                 if cache_len is not None:
                     b["cache_len"] = cache_len
+                ids = b.pop("prefix_ids", None)
+                if ids is not None:
+                    pool_k, pool_v = b.pop("pool_k"), b.pop("pool_v")
+
+                    def gather(slab):
+                        g = slab[:, ids]          # (L, nb, KVH, bs, Dh)
+                        l, nb, kvh, bs, hd = g.shape
+                        g = g.transpose(0, 2, 1, 3, 4).reshape(
+                            l, kvh, nb * bs, hd)
+                        return g[:, None]         # (L, 1, KVH, S, Dh)
+
+                    b["prefix_kv"] = dict(k=gather(pool_k),
+                                          v=gather(pool_v))
                 logits, state, idx = self.api.prefill(p, b)
                 return sample(logits, key), state, idx
 
@@ -286,26 +310,40 @@ class ContinuousScheduler:
         while self._pending and fi < len(free):
             req = self._pending[0]                  # peek: may not fit yet
             n = len(req.tokens)
-            bucket = self._bucket_for(n)
-            if not self.state.can_admit(n, req.max_new_tokens):
+            # prefix planning is pure (no pool side effects): the plan only
+            # shrinks the reservation can_admit gates on, and admit()
+            # realizes it after the terminal-at-admission check below
+            plan = self.state.prefix_plan(req.tokens, req.max_new_tokens)
+            if not self.state.can_admit(n, req.max_new_tokens, plan=plan):
                 break                               # wait for an eviction
             self._pending.popleft()
             slot = int(free[fi])
+            # prefix hit: prefill only the divergent tail, bucketed by its
+            # own (shorter) length; the cache still covers start + bucket
+            start = 0 if plan is None else plan.start
+            tail = req.tokens[start:]
+            bucket = self._bucket_for(len(tail))
             toks = np.full((1, bucket), PAD_ID, np.int32)
-            toks[0, :n] = req.tokens
+            toks[0, :len(tail)] = tail
             batch = dict(tokens=jnp.asarray(toks),
-                         lengths=jnp.asarray([n], jnp.int32))
+                         lengths=jnp.asarray([len(tail)], jnp.int32))
             if req.extra:
                 batch.update({k: jnp.asarray(v)
                               for k, v in req.extra.items()})
+            cache_len = self.state.prefill_cache_len(start + bucket)
+            batch.update(self.state.prefill_prefix_inputs(plan, cache_len))
             key = jax.random.fold_in(
                 jax.random.fold_in(self._key, 1), req.rid)
-            prefill = self._prefill_for(self.state.prefill_cache_len(bucket))
+            prefill = self._prefill_for(cache_len)
+            if self.metrics is not None:
+                self.metrics.record_admit(req.rid)
+                self.metrics.record_prefix(
+                    req.rid,
+                    blocks_reused=plan.blocks_reused if plan else 0,
+                    tokens_skipped=start)
             with self._ctx():
                 tok0, row_state, idx = prefill(self.params, batch, key)
             self.prefills += 1
-            if self.metrics is not None:
-                self.metrics.record_admit(req.rid)
             t0 = int(np.asarray(tok0)[0])
             self.outputs[req.rid] = [t0]
             if self.metrics is not None:
@@ -313,7 +351,7 @@ class ContinuousScheduler:
             if t0 == EOS_ID or req.max_new_tokens <= 1:
                 self._finish(req.rid)      # done at admission: slot stays free
                 continue
-            self.state.admit(slot, n, req.max_new_tokens)
+            self.state.admit(slot, n, req.max_new_tokens, plan=plan)
             with self._ctx():
                 self.state.prefill_insert(row_state, slot, n, bucket)
             self._active[slot] = True
@@ -344,7 +382,9 @@ class ContinuousScheduler:
         # must reflect what this decode actually held resident
         if self.metrics is not None:
             live, total, unit = self.state.occupancy(self.num_active)
-            self.metrics.record_kv_usage(live, total, unit)
+            self.metrics.record_kv_usage(
+                live, total, unit,
+                referenced=self.state.referenced(self.num_active))
         emissions: dict[int, int] = {}
         for slot in np.flatnonzero(self._active):
             rid = int(self._slot_rid[slot])

@@ -45,6 +45,9 @@ class ServeConfig:
     paged: bool = False
     block_size: int = 16
     num_blocks: int | None = None
+    # session-prefix caching (requires paged): refcounted block sharing +
+    # tail-only prefill for prompts with resident prefixes
+    prefix_cache: bool = False
 
 
 def prompt_lengths(prompts: np.ndarray) -> np.ndarray:
@@ -104,7 +107,8 @@ class Server:
                                 seed=self.scfg.seed,
                                 paged=self.scfg.paged,
                                 block_size=self.scfg.block_size,
-                                num_blocks=self.scfg.num_blocks),
+                                num_blocks=self.scfg.num_blocks,
+                                prefix_cache=self.scfg.prefix_cache),
                 mesh=self.mesh)
         return self._schedulers[key]
 

@@ -511,8 +511,10 @@ def test_block_pool_reservation_guards():
     assert pool.available == 3
     pool.free([a])
     assert pool.available == 4
-    with pytest.raises(ValueError, match="out of range"):
+    with pytest.raises(ValueError, match="trash block"):
         pool.free([0])                     # the trash block is never freed
+    with pytest.raises(ValueError, match="out of range"):
+        pool.free([9])
 
 
 def test_block_pool_worst_case_accounting():
