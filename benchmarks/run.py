@@ -18,6 +18,26 @@ import argparse
 import json
 
 
+def select_sections(picked, sections):
+    """Resolve ``--only`` values against the section registry.
+
+    Accepts space- and/or comma-separated names (``--only a,b c``),
+    preserves first-mention order, drops repeats, and raises ``ValueError``
+    naming any unknown section — an unknown ``--only`` must fail loudly,
+    never silently produce no rows.
+    """
+    names = [n for arg in picked for n in arg.split(",") if n]
+    unknown = [n for n in names if n not in sections]
+    if unknown:
+        raise ValueError(
+            f"unknown benchmark section(s) {', '.join(sorted(set(unknown)))}"
+            f"; available: {', '.join(sorted(sections))}")
+    seen: dict[str, None] = {}
+    for n in names:
+        seen.setdefault(n)
+    return list(seen)
+
+
 def main() -> None:
     from . import compression, query_speed, rollups, ngram_table, \
         pipeline_tput, serve_tput
@@ -25,14 +45,19 @@ def main() -> None:
                     rollups=rollups, ngram_table=ngram_table,
                     pipeline_tput=pipeline_tput, serve_tput=serve_tput)
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=sorted(sections), nargs="+",
-                    help="run only these sections (default: all)")
+    ap.add_argument("--only", nargs="+", metavar="SECTION",
+                    help="run only these sections, space- or comma-"
+                         "separated (default: all); unknown names error")
     ap.add_argument("--json", action="store_true",
                     help="also write each section's machine-readable "
                          "payload (BENCH_<section>.json next to the CSV) "
                          "so the perf trajectory is recorded")
     args = ap.parse_args()
-    picked = args.only or list(sections)
+    try:
+        picked = (select_sections(args.only, sections) if args.only
+                  else list(sections))
+    except ValueError as e:
+        ap.error(str(e))
     print("name,us_per_call,derived")
     for name in picked:
         mod = sections[name]

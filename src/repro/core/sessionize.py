@@ -102,9 +102,11 @@ def mark_duplicate_events(user_id, session_id, timestamp, code, ip, valid):
     return jnp.zeros(n, bool).at[idx_s].set(keep_sorted)
 
 
-@functools.partial(jax.jit, static_argnames=("gap_ms", "max_sessions", "max_len"))
+@functools.partial(jax.jit, static_argnames=("gap_ms", "max_sessions",
+                                             "max_len", "with_event_grids"))
 def _sessionize(user_id, session_id, timestamp, code, ip, valid,
-                *, gap_ms: int, max_sessions: int, max_len: int):
+                *, gap_ms: int, max_sessions: int, max_len: int,
+                with_event_grids: bool = False):
     n = user_id.shape[0]
     i64max = jnp.asarray(_I64_MAX, jnp.int64)
 
@@ -163,7 +165,20 @@ def _sessionize(user_id, session_id, timestamp, code, ip, valid,
     duration_s = ((end_ts[:max_sessions] - start_ts[:max_sessions])
                   // 1000).astype(jnp.int32)
     empty = length[:max_sessions] == 0
+    extras = {}
+    if with_event_grids:
+        # Per-event grids aligned with ``symbols`` (streaming ring state:
+        # data/streampipe.py re-sorts open sessions with new events each
+        # tick, so it must keep every stored event's timestamp and ip).
+        ts_grid = jnp.zeros((max_sessions, max_len), jnp.int64)
+        ip_grid = jnp.zeros((max_sessions, max_len), jnp.int64)
+        extras = dict(
+            event_ts=ts_grid.at[seg, pos].set(t, mode="drop"),
+            event_ip=ip_grid.at[seg, pos].set(ip_s, mode="drop"),
+            end_ts=jnp.where(empty, 0, jnp.asarray(end_ts[:max_sessions])),
+        )
     return dict(
+        **extras,
         symbols=symbols,
         length=length[:max_sessions],
         user_id=jnp.where(empty, -1, seg_user[:max_sessions]),

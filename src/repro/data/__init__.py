@@ -23,6 +23,14 @@ Public API by module:
   ``DistPipelineConfig``, ``DistPipelineResult``,
   ``make_distributed_pipeline``, ``DistributedPipeline``,
   ``single_host_pipeline``, ``SingleHostResult``.
+* ``streampipe`` — the streaming fast-data tier over the same collectives
+  (micro-batch ticks, watermark-closed sessions, incremental psum-merged
+  rollup deltas; closed-prefix bit-equal to ``distpipe``):
+  ``StreamConfig``, ``StreamResult``, ``TickResult``, ``SingleHostStream``,
+  ``StreamPipeline``, ``single_host_stream``, ``make_stream_pipeline``,
+  ``build_stream_tick_fn``, ``stream_state_structs``, ``replay``,
+  ``split_ticks``, ``closed_prefix_mask``, ``batch_closed_prefix``,
+  ``session_multiset``, ``assert_stream_equals_batch``.
 
 ``pipeline`` and ``distpipe`` split at the materialization boundary:
 ``distpipe`` turns the hour's raw event columns into session sequences and
@@ -39,6 +47,13 @@ from .pipeline import (SessionBatchPipeline, PipelineConfig, pack_sessions,
 from .distpipe import (DistPipelineConfig, DistPipelineResult,
                        DistributedPipeline, make_distributed_pipeline,
                        single_host_pipeline, SingleHostResult)
+from .streampipe import (StreamConfig, StreamResult, TickResult,
+                         SingleHostStream, StreamPipeline,
+                         single_host_stream, make_stream_pipeline,
+                         build_stream_tick_fn, stream_state_structs,
+                         replay, split_ticks, closed_prefix_mask,
+                         batch_closed_prefix, session_multiset,
+                         assert_stream_equals_batch)
 
 __all__ = [
     "LogGenConfig", "GeneratedLog", "generate", "build_name_table",
@@ -50,4 +65,9 @@ __all__ = [
     "PAD_ID", "BOS_ID", "EOS_ID", "UNK_ID", "NUM_SPECIALS",
     "DistPipelineConfig", "DistPipelineResult", "DistributedPipeline",
     "make_distributed_pipeline", "single_host_pipeline", "SingleHostResult",
+    "StreamConfig", "StreamResult", "TickResult", "SingleHostStream",
+    "StreamPipeline", "single_host_stream", "make_stream_pipeline",
+    "build_stream_tick_fn", "stream_state_structs", "replay", "split_ticks",
+    "closed_prefix_mask", "batch_closed_prefix", "session_multiset",
+    "assert_stream_equals_batch",
 ]

@@ -22,12 +22,15 @@ Results are cached as JSON per (arch, shape, mesh, mode) under
 
 Besides the model cells there are pipeline cells: the distributed log
 pipeline (data/distpipe.py) lowered at hour-of-events shapes on the
-production mesh, for all_to_all/psum collective sizing.
+production mesh, for all_to_all/psum collective sizing — and stream cells:
+one streaming micro-batch tick (data/streampipe.py) lowered at
+events-per-tick shapes (ring merge + repartition + delta psums).
 
 Usage:
   python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
       --mesh single --mode full
   python -m repro.launch.dryrun --pipeline hour_1m --mesh single
+  python -m repro.launch.dryrun --stream tick_64k --mesh single
   python -m repro.launch.dryrun --all            # full sweep (both meshes)
 """
 import argparse
@@ -225,6 +228,89 @@ def run_pipeline_cell(shape_name: str, mesh_kind: str,
     )
 
 
+STREAM_SHAPES = {
+    "tick_64k": 1 << 16,
+    "tick_256k": 1 << 18,
+}
+
+
+def make_stream_cell(tick_events: int, mesh, *, alphabet: int = 1024,
+                     max_len: int = 256, max_open: int = 4096,
+                     n_stages: int = 4, capacity_factor: float = 2.0):
+    """(fn, args, in_shardings) for one streaming micro-batch tick.
+
+    The ring state and event columns are ShapeDtypeStructs sharded over the
+    mesh ``data`` axis; the two watermarks and the stage table are
+    replicated. Like the batch pipeline cell, lowering runs under
+    ``enable_x64`` (int64 ids/timestamps end-to-end).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from ..data.streampipe import (StreamConfig, build_stream_tick_fn,
+                                   stream_state_structs)
+
+    n_shards = mesh.shape["data"]
+    cfg = StreamConfig(
+        alphabet_size=alphabet, max_open=max_open, max_len=max_len,
+        tick_capacity=tick_events, capacity_factor=capacity_factor)
+    fn = build_stream_tick_fn(mesh, cfg, n_stages)
+    sds = jax.ShapeDtypeStruct
+    ring = stream_state_structs(cfg, n_shards)
+    args = (ring,
+            sds((tick_events,), np.int64), sds((tick_events,), np.int64),
+            sds((tick_events,), np.int64), sds((tick_events,), np.int32),
+            sds((tick_events,), np.int64), sds((tick_events,), bool),
+            sds((), np.int64), sds((), np.int64),
+            sds((n_stages, alphabet), bool))
+    col = NamedSharding(mesh, P("data"))
+    rep = NamedSharding(mesh, P())
+    ring_sh = {k: col for k in ring}
+    return fn, args, (ring_sh,) + (col,) * 6 + (rep,) * 3
+
+
+def run_stream_cell(shape_name: str, mesh_kind: str,
+                    overrides: dict | None = None, tag: str = "") -> dict:
+    """Lower + compile one streaming tick on the production mesh; same
+    roofline extraction as the batch pipeline cell. The tick's collectives
+    are the keyed all_to_all repartition plus the rollup-delta psums."""
+    from jax.experimental import enable_x64
+    from ..dist.compat import cost_analysis, use_mesh
+    from ..dist.mesh import make_production_mesh
+
+    overrides = dict(overrides or {})
+    data = overrides.pop("mesh_data", 16)
+    model = overrides.pop("mesh_model", 256 // data)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"),
+                                data=data, model=model)
+    tick_events = STREAM_SHAPES[shape_name]
+    t0 = time.time()
+    fn, args, in_sh = make_stream_cell(tick_events, mesh, **overrides)
+    jitted = jax.jit(fn, in_shardings=in_sh)
+    with enable_x64():
+        with use_mesh(mesh):
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = cost_analysis(compiled)
+    return dict(
+        arch="stream", shape=shape_name, mesh=mesh_kind, mode="cost",
+        tag=tag, skipped=False, tick_events=tick_events,
+        overrides=overrides or {},
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+        ),
+        flops=cost.get("flops"),
+        bytes_accessed=cost.get("bytes accessed"),
+        utilization=cost.get("utilization", None),
+        collectives=collective_bytes(compiled.as_text()),
+    )
+
+
 def result_path(arch, shape, mesh, mode, tag=""):
     name = f"{arch}__{shape}__{mesh}__{mode}{('__' + tag) if tag else ''}.json"
     return os.path.join(RESULTS_DIR, name)
@@ -241,26 +327,34 @@ def main():
     ap.add_argument("--pipeline", choices=sorted(PIPELINE_SHAPES),
                     help="lower+compile the distributed log pipeline at this "
                          "shape instead of a model cell")
+    ap.add_argument("--stream", choices=sorted(STREAM_SHAPES),
+                    help="lower+compile one streaming micro-batch tick "
+                         "(data/streampipe.py) at this tick shape instead "
+                         "of a model cell")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
 
-    if args.pipeline:
-        if args.arch or args.shape or args.mode != "full" or args.all:
-            ap.error("--pipeline is its own cell kind; it cannot be combined "
-                     "with --arch/--shape/--mode/--all (collective bytes are "
+    if args.pipeline or args.stream:
+        if args.arch or args.shape or args.mode != "full" or args.all \
+                or (args.pipeline and args.stream):
+            ap.error("--pipeline/--stream are their own cell kinds; they "
+                     "cannot be combined with each other or with "
+                     "--arch/--shape/--mode/--all (collective bytes are "
                      "always extracted, i.e. cost mode)")
+        kind = "pipeline" if args.pipeline else "stream"
+        shape = args.pipeline or args.stream
+        runner = run_pipeline_cell if args.pipeline else run_stream_cell
         try:
-            res = run_pipeline_cell(args.pipeline, args.mesh,
-                                    json.loads(args.overrides), args.tag)
+            res = runner(shape, args.mesh, json.loads(args.overrides),
+                         args.tag)
         except Exception:
-            res = dict(arch="pipeline", shape=args.pipeline, mesh=args.mesh,
+            res = dict(arch=kind, shape=shape, mesh=args.mesh,
                        mode="cost", tag=args.tag, error=True,
                        traceback=traceback.format_exc())
-        path = result_path("pipeline", args.pipeline, args.mesh, "cost",
-                           args.tag)
+        path = result_path(kind, shape, args.mesh, "cost", args.tag)
         with open(path, "w") as f:
             json.dump(res, f, indent=2)
         if res.get("error"):

@@ -170,6 +170,31 @@ def test_capacity_overflow_is_counted_never_silent():
     assert res.funnel_reach is None  # built without stages
 
 
+def test_loggen_corpus_pipeline_matches_oracle(loggen_corpus):
+    """The shared loggen day (same fixture the streaming equivalence tests
+    replay in test_streampipe.py) through the batch pipeline: mesh path ==
+    single-host oracle on identical inputs, including the signup funnel."""
+    import jax
+    from repro.data.distpipe import (DistPipelineConfig,
+                                     make_distributed_pipeline,
+                                     single_host_pipeline)
+    lc = loggen_corpus
+    cfg = DistPipelineConfig(alphabet_size=lc.alphabet_size,
+                             max_sessions_per_shard=lc.n_events,
+                             max_len=128)
+    pipe = make_distributed_pipeline(jax.make_mesh((1,), ("data",)), cfg,
+                                     lc.stages)
+    res = pipe(lc.user_id, lc.session_id, lc.timestamp, lc.code, lc.ip)
+    ora = single_host_pipeline(lc.user_id, lc.session_id, lc.timestamp,
+                               lc.code, lc.ip, cfg=cfg, stages=lc.stages)
+    assert res.dropped == 0 and not res.truncated
+    assert res.num_sessions() == ora.num_sessions() > 0
+    assert np.array_equal(res.ngram_counts, ora.ngram_counts)
+    assert res.funnel_reach == ora.funnel_reach
+    # the funnel is actually populated in the corpus, not vacuously equal
+    assert ora.funnel_reach[0][1] > 0
+
+
 @pytest.mark.parametrize("n", [4096, 4093])  # divisible and ragged
 def test_8shard_pipeline_matches_single_host(n):
     _run(f"""

@@ -1,0 +1,396 @@
+"""Streaming fast-data tier (repro.data.streampipe): watermark semantics,
+ring-buffer overflow accounting, zero-retrace ticks, and — the core
+contract — closed-prefix bit-equality against the batch distpipe oracle at
+every watermark, on shuffled / late / duplicated streams and on a full
+loggen day. Also covers the benchmarks/run.py --only section selector."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(body: str) -> str:
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys; sys.path.insert(0, {REPO_SRC!r})
+        import numpy as np, jax, jax.numpy as jnp
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+    """)
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def _events(n, seed, n_users=12, ts_hi=5 * 10**7):
+    rng = np.random.default_rng(seed)
+    user = rng.integers(0, n_users, n).astype(np.int64) * 7919
+    sess = rng.integers(0, 3, n).astype(np.int64)
+    ts = rng.integers(0, ts_hi, n).astype(np.int64)
+    code = rng.integers(0, 16, n).astype(np.int32)
+    ip = rng.integers(0, 1 << 32, n).astype(np.int64)
+    return user, sess, ts, code, ip
+
+
+def _cfg(**kw):
+    from repro.data.streampipe import StreamConfig
+    base = dict(alphabet_size=16, max_open=64, max_len=64,
+                tick_capacity=64)
+    base.update(kw)
+    return StreamConfig(**base)
+
+
+GAP = 30 * 60 * 1000  # DEFAULT_GAP_MS
+
+
+# ---------------------------------------------------------------------------
+# watermark + ring semantics (deterministic)
+# ---------------------------------------------------------------------------
+
+def test_empty_tick_is_noop():
+    from repro.data.streampipe import single_host_stream
+    s = single_host_stream(_cfg())
+    u, se, ts, c, ip = _events(20, seed=1)
+    s.tick(u, se, ts, c, ip, watermark=0)  # nothing closes
+    before = s.open_state()
+    wm = s.watermark
+    z = np.zeros(0, np.int64)
+    res = s.tick(z, z, z, np.zeros(0, np.int32))
+    assert res.watermark == wm and s.watermark == wm
+    assert res.closed_sessions == 0 and res.late_dropped == 0
+    assert res.ring_dropped_events == 0 and res.shuffle_dropped == 0
+    after = s.open_state()
+    for k in before:
+        assert np.array_equal(before[k], after[k]), k
+
+
+def test_watermark_boundary_session_close():
+    """A session closes only when end_ts + gap is *strictly* below the
+    watermark — an event at exactly end_ts + gap can still extend it."""
+    from repro.data.streampipe import single_host_stream
+    one = lambda v, dt=np.int64: np.array([v], dt)
+
+    s = single_host_stream(_cfg())
+    s.tick(one(7), one(0), one(1000), one(3, np.int32))
+    # watermark = end + gap: an acceptable event at ts == watermark still
+    # has ts - end == gap (not > gap), so the session must stay open...
+    res = s.tick(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                 np.zeros(0, np.int64), np.zeros(0, np.int32),
+                 watermark=1000 + GAP)
+    assert res.closed_sessions == 0 and res.open_sessions == 1
+    # ...and such an event does extend it:
+    res = s.tick(one(7), one(0), one(1000 + GAP), one(4, np.int32))
+    assert res.late_dropped == 0 and res.open_sessions == 1
+    # one past end + gap closes it, with both events merged.
+    res = s.tick(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                 np.zeros(0, np.int64), np.zeros(0, np.int32),
+                 watermark=1000 + 2 * GAP + 1)
+    assert res.closed_sessions == 1 and res.open_sessions == 0
+    seqs = s.sessions()
+    assert len(seqs) == 1 and int(seqs.length[0]) == 2
+    assert list(seqs.symbols[0][:2]) == [3, 4]
+    assert int(seqs.duration_s[0]) == GAP // 1000
+
+
+def test_late_events_dropped_and_counted():
+    from repro.data.streampipe import single_host_stream
+    s = single_host_stream(_cfg())
+    u, se, ts, c, ip = _events(30, seed=2)
+    s.tick(u, se, ts, c, ip, watermark=10**9)  # everything closes
+    before = s.result()
+    res = s.tick(u[:5], se[:5], ts[:5] % 100, c[:5], ip[:5])  # all < wm
+    assert res.late_dropped == 5
+    assert not res.accepted.any()
+    # late rows never materialize: closed sessions and totals untouched.
+    assert res.closed_sessions == 0 and res.open_sessions == 0
+    after = s.result()
+    assert np.array_equal(before.ngram_counts, after.ngram_counts)
+    assert before.num_sessions() == after.num_sessions()
+    assert after.late_dropped == 5
+
+
+def test_watermark_is_monotone():
+    from repro.data.streampipe import single_host_stream
+    s = single_host_stream(_cfg())
+    u, se, ts, c, ip = _events(10, seed=3)
+    s.tick(u, se, ts, c, ip, watermark=500)
+    res = s.tick(u, se, np.maximum(ts, 500), c, ip, watermark=100)
+    assert res.watermark == 500 and s.watermark == 500
+
+
+def test_flush_closes_everything_and_matches_full_batch():
+    from repro.data.streampipe import (batch_closed_prefix, replay,
+                                       assert_stream_equals_batch,
+                                       single_host_stream, WATERMARK_MAX)
+    cfg = _cfg(allowed_lateness_ms=60_000)
+    stages = [np.array([1, 2]), np.array([5])]
+    s = single_host_stream(cfg, stages)
+    u, se, ts, c, ip = _events(200, seed=4)
+    replay(s, u, se, ts, c, ip, n_ticks=4)
+    assert s.watermark == WATERMARK_MAX
+    last = s.flush()
+    assert last.open_sessions == 0 and s.watermark_lag_ms == 0
+    oracle = batch_closed_prefix(cfg, stages, u, se, ts, c, ip,
+                                 np.ones(len(u), bool), WATERMARK_MAX)
+    assert_stream_equals_batch(s, oracle)
+
+
+def test_ring_overflow_counted_surviving_sessions_unaffected():
+    """More open sessions than max_open: overflow sessions are dropped
+    whole and counted; survivors' final sessions stay bit-exact."""
+    from repro.data.streampipe import single_host_stream
+    cfg = _cfg(max_open=2)
+    s = single_host_stream(cfg)
+    users = np.array([10, 20, 30, 40], np.int64)
+    zeros = np.zeros(4, np.int64)
+    # tick 1: one event per user, all open -> users 30, 40 overflow out.
+    r1 = s.tick(users, zeros, np.arange(1000, 1004, dtype=np.int64),
+                np.arange(4, dtype=np.int32), watermark=0)
+    assert r1.ring_dropped_sessions == 2 and r1.ring_dropped_events == 2
+    assert r1.open_sessions == 2
+    # tick 2: a second event per user; 30/40 re-open (first event lost)
+    # and overflow out again.
+    r2 = s.tick(users, zeros, np.arange(2000, 2004, dtype=np.int64),
+                np.arange(4, 8, dtype=np.int32), watermark=0)
+    assert r2.ring_dropped_sessions == 2 and r2.ring_dropped_events == 2
+    s.flush()
+    seqs = s.sessions()
+    got = {int(seqs.user_id[j]):
+           [int(x) for x in seqs.symbols[j][:int(seqs.length[j])]]
+           for j in range(len(seqs))}
+    # survivors (lowest-sorting users) carry both events, untouched by the
+    # drops; overflowed users lost everything.
+    assert got == {10: [0, 4], 20: [1, 5]}
+    assert s.ring_dropped_events == 4 and s.ring_dropped_sessions == 4
+
+
+def test_tick_capacity_exceeded_raises():
+    from repro.data.streampipe import single_host_stream
+    s = single_host_stream(_cfg(tick_capacity=8))
+    u, se, ts, c, ip = _events(9, seed=5)
+    with pytest.raises(ValueError, match="tick_capacity"):
+        s.tick(u, se, ts, c, ip)
+
+
+def test_stream_state_structs_shapes():
+    from repro.data.streampipe import stream_state_structs
+    cfg = _cfg(max_open=32, max_len=16)
+    flat = stream_state_structs(cfg)
+    assert flat["symbols"].shape == (32, 16)
+    assert flat["user_id"].shape == (32,)
+    sharded = stream_state_structs(cfg, n_shards=8)
+    assert sharded["event_ts"].shape == (8, 32, 16)
+    assert sharded["valid"].dtype == bool
+
+
+# ---------------------------------------------------------------------------
+# zero-retrace discipline
+# ---------------------------------------------------------------------------
+
+def test_streaming_tick_never_retraces():
+    """After the first tick per config, every later tick — mid-stream,
+    empty, flush, even from a *second* stream instance with the same
+    config — must hit the jit cache (mirrors test_serve trace_counts)."""
+    from repro.data.streampipe import replay, single_host_stream
+    cfg = _cfg(allowed_lateness_ms=777)  # unique cfg -> fresh jit cache
+    s = single_host_stream(cfg)
+    u, se, ts, c, ip = _events(150, seed=6)
+    replay(s, u, se, ts, c, ip, n_ticks=5)  # 5 ticks + flush
+    assert s.trace_counts["tick"] == 1
+    s2 = single_host_stream(cfg)
+    replay(s2, u, se, ts, c, ip, n_ticks=3)
+    assert s2.trace_counts is s.trace_counts
+    assert s2.trace_counts["tick"] == 1
+
+
+# ---------------------------------------------------------------------------
+# property tests: closed-prefix bit-equality at every watermark
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_property_shuffled_late_streams_match_oracle(seed):
+    """Arbitrary arrival order: events land in random ticks, so many are
+    late (dropped + counted); the closed prefix of *accepted* events must
+    bit-equal the batch oracle at every watermark."""
+    from repro.data.streampipe import replay, single_host_stream
+    u, se, ts, c, ip = _events(192, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    ticks = list(np.array_split(rng.permutation(len(u)), 4))
+    s = single_host_stream(_cfg(allowed_lateness_ms=60_000),
+                           stages=[np.array([1, 2]), np.array([5])])
+    replay(s, u, se, ts, c, ip, tick_index=ticks,
+           assert_closed_prefix=True)
+    assert not s.truncated and s.ring_dropped_sessions == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_property_duplicates_within_and_across_ticks(seed):
+    """Exact retry duplicates — in the same tick as the original or ticks
+    later — never change closed sessions or rollup totals (cross-tick
+    dedup runs against the ring's stored per-event keys)."""
+    from repro.data.streampipe import replay, single_host_stream
+    u, se, ts, c, ip = _events(160, seed=seed)
+    rng = np.random.default_rng(seed + 2)
+    src = rng.choice(160, 48, replace=False)
+    cols = tuple(np.concatenate([a, a[src]]) for a in (u, se, ts, c, ip))
+    order = np.argsort(cols[2], kind="stable")
+    # originals in time order; dupes of rows from any earlier tick are
+    # appended to later ticks (and some share a tick with their original).
+    ticks = list(np.array_split(order, 4))
+    s = single_host_stream(_cfg(tick_capacity=128, allowed_lateness_ms=0))
+    replay(s, *cols, tick_index=ticks, assert_closed_prefix=True)
+    assert not s.truncated
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6))
+def test_property_time_ordered_ticks_drop_nothing(seed):
+    """The log mover's arrival order (time-sorted ticks) with zero allowed
+    lateness: no event is ever late, and the post-flush result equals the
+    whole-batch oracle exactly."""
+    from repro.data.streampipe import replay, single_host_stream
+    u, se, ts, c, ip = _events(192, seed=seed)
+    s = single_host_stream(_cfg())
+    results = replay(s, u, se, ts, c, ip, n_ticks=4,
+                     assert_closed_prefix=True)
+    assert s.late_dropped == 0 and s.ring_dropped_events == 0
+    assert sum(r.closed_sessions for r in results) == s.closed_total
+
+
+# ---------------------------------------------------------------------------
+# a full loggen day vs the batch pipeline (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_loggen_day_replay_bit_equal_at_every_watermark(loggen_corpus):
+    from repro.data.distpipe import single_host_pipeline
+    from repro.data.streampipe import (StreamConfig, replay,
+                                       session_multiset,
+                                       single_host_stream)
+    lc = loggen_corpus
+    cfg = StreamConfig(alphabet_size=lc.alphabet_size, max_open=128,
+                       max_len=128, tick_capacity=1024,
+                       allowed_lateness_ms=60_000)
+    s = single_host_stream(cfg, stages=lc.stages)
+    replay(s, lc.user_id, lc.session_id, lc.timestamp, lc.code, lc.ip,
+           n_ticks=12, assert_closed_prefix=True)
+    assert s.trace_counts["tick"] == 1
+    assert s.late_dropped == 0 and s.ring_dropped_sessions == 0
+    assert not s.truncated
+    got = s.result()
+    oracle = single_host_pipeline(
+        lc.user_id, lc.session_id, lc.timestamp, lc.code, lc.ip,
+        cfg=cfg.batch_config(lc.n_events), stages=lc.stages)
+    assert np.array_equal(got.ngram_counts, oracle.ngram_counts)
+    assert got.funnel_reach == oracle.funnel_reach
+    assert session_multiset(got.sequences) == \
+        session_multiset(oracle.sequences)
+
+
+# ---------------------------------------------------------------------------
+# distributed streaming path
+# ---------------------------------------------------------------------------
+
+def test_stream_pipeline_single_shard_matches_single_host():
+    import jax
+    from repro.data.streampipe import (make_stream_pipeline, replay,
+                                       session_multiset,
+                                       single_host_stream)
+    cfg = _cfg(allowed_lateness_ms=30_000)
+    stages = [np.array([1, 2]), np.array([5])]
+    u, se, ts, c, ip = _events(200, seed=9)
+    sp = make_stream_pipeline(jax.make_mesh((1,), ("data",)), cfg, stages)
+    sh = single_host_stream(cfg, stages)
+    replay(sp, u, se, ts, c, ip, n_ticks=4)
+    replay(sh, u, se, ts, c, ip, n_ticks=4)
+    assert sp.trace_counts["tick"] == 1
+    a, b = sp.result(), sh.result()
+    assert a.shuffle_dropped == 0
+    assert np.array_equal(a.ngram_counts, b.ngram_counts)
+    assert a.funnel_reach == b.funnel_reach
+    assert session_multiset(a.sequences) == session_multiset(b.sequences)
+
+
+def test_repartition_overflow_counted_never_silent():
+    import jax
+    from repro.data.streampipe import make_stream_pipeline, replay
+    cfg = _cfg(capacity_factor=0.25)  # undersized all_to_all buckets
+    u, se, ts, c, ip = _events(200, seed=10, n_users=2)
+    sp = make_stream_pipeline(jax.make_mesh((1,), ("data",)), cfg)
+    replay(sp, u, se, ts, c, ip, n_ticks=4)
+    assert sp.result().shuffle_dropped > 0
+
+
+def test_8shard_stream_matches_single_host():
+    _run("""
+    from repro.data.streampipe import (StreamConfig, make_stream_pipeline,
+                                       replay, session_multiset,
+                                       single_host_stream)
+    rng = np.random.default_rng(11)
+    n = 512
+    user = rng.integers(0, 60, n).astype(np.int64) * 7919
+    sess = rng.integers(0, 3, n).astype(np.int64)
+    ts = rng.integers(0, 2 * 10**7, n).astype(np.int64)
+    code = rng.integers(0, 16, n).astype(np.int32)
+    ip = rng.integers(0, 1 << 32, n).astype(np.int64)
+    stages = [np.array([1, 2]), np.array([5])]
+    cfg = StreamConfig(alphabet_size=16, max_open=96, max_len=64,
+                       tick_capacity=128, capacity_factor=8.0,
+                       allowed_lateness_ms=60_000)
+    ticks = list(np.array_split(rng.permutation(n), 4))
+    sp = make_stream_pipeline(jax.make_mesh((8,), ("data",)), cfg, stages)
+    sh = single_host_stream(cfg, stages)
+    replay(sp, user, sess, ts, code, ip, tick_index=ticks)
+    replay(sh, user, sess, ts, code, ip, tick_index=ticks)
+    a, b = sp.result(), sh.result()
+    assert a.shuffle_dropped == 0
+    assert a.late_dropped == b.late_dropped > 0
+    assert np.array_equal(a.ngram_counts, b.ngram_counts)
+    assert a.funnel_reach == b.funnel_reach
+    assert session_multiset(a.sequences) == session_multiset(b.sequences)
+    assert sp.trace_counts["tick"] == 1
+    print("OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py --only selector (satellite fix)
+# ---------------------------------------------------------------------------
+
+def _sections():
+    return {n: None for n in ("compression", "pipeline_tput", "serve_tput")}
+
+
+def test_select_sections_accepts_commas_and_spaces():
+    sys.path.insert(0, REPO_ROOT)
+    try:
+        from benchmarks.run import select_sections
+    finally:
+        sys.path.pop(0)
+    secs = _sections()
+    assert select_sections(["pipeline_tput,serve_tput"], secs) == \
+        ["pipeline_tput", "serve_tput"]
+    assert select_sections(["compression", "pipeline_tput,compression"],
+                           secs) == ["compression", "pipeline_tput"]
+
+
+def test_select_sections_unknown_name_errors_loudly():
+    sys.path.insert(0, REPO_ROOT)
+    try:
+        from benchmarks.run import select_sections
+    finally:
+        sys.path.pop(0)
+    with pytest.raises(ValueError, match="stream_tputt"):
+        select_sections(["pipeline_tput,stream_tputt"], _sections())
+    with pytest.raises(ValueError, match="available"):
+        select_sections(["nope"], _sections())
