@@ -4,8 +4,14 @@ path re-does the scan + group-by every time.
 
 raw path      = sessionize(raw events) -> count/funnel   (the old Pig job)
 mat. path     = count/funnel over the stored sequences   (session sequences)
+store path    = same answers through the segment store's pruning scan
+                (repro.data.store): segment metadata skips non-matching
+                segments before a single payload byte decodes
 kernel path   = same, through the Pallas kernels (interpret on CPU; the
                 TPU-native formulation, included for completeness)
+
+Every store row asserts its answer equals the raw re-sessionize path —
+pruning must never change a result, only skip work.
 """
 from __future__ import annotations
 
@@ -13,10 +19,18 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import sessionize, SessionSequences
-from repro.analytics import count_events, funnel_reach, build_stage_table
+from repro.analytics import (count_events, count_events_store, funnel_reach,
+                             funnel_reach_store, build_stage_table)
+from repro.data.store import scan_matches_sessions, _take_rows
 from repro.kernels.funnel_match.ops import deepest_stage
 from repro.kernels.event_count.ops import histogram as k_histogram
 from .common import corpus, timeit, row
+from .compression import build_store
+
+# Merged into BENCH_pipeline.json by benchmarks/run.py --json; the CI and
+# docs-freshness gates check "store_query" (pruned fraction + equal_raw).
+LAST_JSON: dict | None = None
+JSON_PATH = "BENCH_pipeline.json"
 
 FUNNEL_PATTERNS = ["*:signup:landing:form:signup_button:click",
                    "*:signup:form:form:submit_button:submit",
@@ -70,14 +84,79 @@ def run() -> list[str]:
     us_kh = timeit(lambda: np.asarray(k_histogram(sym, mask, A,
                                                   impl="interpret")))
 
+    # ---- the store-backed path: pruned scan vs full re-sessionize --------
+    global LAST_JSON
+    store = build_store(b, codes)
+    # staged compaction at trailing watermarks (the log mover's hourly
+    # folds) — several session segments, so time pruning has granularity
+    for q in (25, 50, 75):
+        store.compact(int(np.percentile(b.timestamp, q)))
+    store.compact()
+
+    def store_count():
+        return count_events_store(store, targets, A)
+
+    us_store = timeit(store_count)
+    assert store_count() == want  # pruned scan == raw re-sessionize
+
+    def store_funnel():
+        return funnel_reach_store(store, stages, A)
+
+    us_storef = timeit(store_funnel)
+    funnel_equal = store_funnel() == raw_funnel()
+    assert funnel_equal
+
+    # time-windowed count: pruning skips segments outside the window; the
+    # raw equivalent re-sessionizes everything then filters the sessions
+    # with the scan's own exact predicate.
+    lo = int(np.percentile(b.timestamp, 40))
+    hi = int(np.percentile(b.timestamp, 60))
+
+    def windowed_count():
+        return count_events(
+            store.sequences(time_range=(lo, hi), events=list(targets)),
+            targets, A)
+
+    us_window = timeit(windowed_count)
+    scan = store.scan(time_range=(lo, hi), events=list(targets))
+    full = store.scan()
+    keep = scan_matches_sessions(full.sequences, (lo, hi), None,
+                                 np.asarray(targets))
+    window_equal = (windowed_count()
+                    == count_events(_take_rows(full.sequences, keep),
+                                    targets, A))
+    assert window_equal
+    assert scan.stats.segments_decoded < full.stats.segments_decoded
+    pruned_frac = 1 - scan.stats.segments_decoded / scan.stats.segments_total
+    LAST_JSON = {"store_query": {
+        "segments_total": scan.stats.segments_total,
+        "segments_decoded": scan.stats.segments_decoded,
+        "pruned_frac": pruned_frac,
+        "us_store_count": us_store, "us_raw_count": us_raw,
+        "us_windowed_count": us_window,
+        "equal_raw": bool(store_count() == want and funnel_equal
+                          and window_equal),
+    }}
+
     return [
         row("count_raw_logs", us_raw, f"events={n_events}"),
         row("count_session_sequences", us_mat,
             f"speedup={us_raw / us_mat:.1f}x sum={want[0]} sessions={want[1]}"),
+        row("count_store_scan", us_store,
+            f"speedup={us_raw / us_store:.1f}x vs raw (code-pruned scan); "
+            f"equal_raw=True"),
+        row("count_store_window", us_window,
+            f"speedup={us_raw / us_window:.1f}x vs full re-sessionize; "
+            f"decoded {scan.stats.segments_decoded}/"
+            f"{scan.stats.segments_total} segments "
+            f"(pruned {pruned_frac:.0%})"),
         row("funnel_raw_logs", us_rawf, f"stages={len(stages)}"),
         row("funnel_session_sequences", us_matf,
             f"speedup={us_rawf / us_matf:.1f}x reach="
             + "/".join(str(c2) for _, c2 in mat_funnel())),
+        row("funnel_store_scan", us_storef,
+            f"speedup={us_rawf / us_storef:.1f}x vs raw "
+            "(stage-0 pruned scan); equal_raw=True"),
         row("funnel_pallas_interpret", us_kf, "TPU-kernel path (interpret)"),
         row("histogram_pallas_interpret", us_kh, "TPU-kernel path (interpret)"),
     ]

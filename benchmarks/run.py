@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 
 def select_sections(picked, sections):
@@ -66,8 +67,19 @@ def main() -> None:
         payload = getattr(mod, "LAST_JSON", None)
         if args.json and payload is not None:
             path = getattr(mod, "JSON_PATH", f"BENCH_{name}.json")
+            # Sections share files (compression/query_speed/pipeline_tput
+            # all land in BENCH_pipeline.json): merge top-level keys so a
+            # partial --only run never clobbers the other sections.
+            merged = {}
+            if os.path.exists(path):
+                try:
+                    with open(path) as f:
+                        merged = json.load(f)
+                except (json.JSONDecodeError, OSError):
+                    merged = {}
+            merged.update(payload)
             with open(path, "w") as f:
-                json.dump(payload, f, indent=2, sort_keys=True)
+                json.dump(merged, f, indent=2, sort_keys=True)
                 f.write("\n")
 
 

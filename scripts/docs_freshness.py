@@ -6,10 +6,15 @@ Fails CI when the top-level docs drift from the tree:
 * the test-module count README claims ("spans **N test modules**") must
   match what ``pytest --collect-only -q`` actually collects;
 * every ``examples/``, ``benchmarks/`` and ``docs/`` path README mentions
-  must exist.
+  must exist;
+* the committed ``BENCH_pipeline.json`` must carry the segment-store
+  sections with their equivalence flags true — a perf trajectory entry
+  whose store-vs-oracle or store-vs-raw-query check failed must never
+  land as if it were a valid measurement.
 """
 from __future__ import annotations
 
+import json
 import re
 import subprocess
 import sys
@@ -60,7 +65,39 @@ def main() -> None:
     if missing:
         fail(f"README references missing paths: {missing}")
 
+    check_store_bench(ROOT / "BENCH_pipeline.json")
+
     print(f"docs-freshness: OK ({actual} test modules, README claims match)")
+
+
+def check_store_bench(path: Path) -> None:
+    """The committed benchmark record must include the segment-store rows
+    and their correctness flags must be true (benchmarks/compression.py
+    and benchmarks/query_speed.py assert these at measurement time; this
+    catches a stale or hand-edited committed record)."""
+    if not path.exists():
+        fail("BENCH_pipeline.json is absent")
+    try:
+        bench = json.loads(path.read_text())
+    except json.JSONDecodeError as e:
+        fail(f"BENCH_pipeline.json does not parse: {e}")
+    store = bench.get("store")
+    if not isinstance(store, dict):
+        fail("BENCH_pipeline.json has no 'store' section — run "
+             "benchmarks.run --only compression --json")
+    if not isinstance(store.get("bytes_per_event"), (int, float)) \
+            or store["bytes_per_event"] <= 0:
+        fail("store.bytes_per_event missing or non-positive")
+    if store.get("equal_oracle") is not True:
+        fail("store.equal_oracle is not true — compaction no longer "
+             "matches the full-corpus sessionize oracle")
+    sq = bench.get("store_query")
+    if not isinstance(sq, dict):
+        fail("BENCH_pipeline.json has no 'store_query' section — run "
+             "benchmarks.run --only query_speed --json")
+    if sq.get("equal_raw") is not True:
+        fail("store_query.equal_raw is not true — the pruned scan no "
+             "longer matches the raw re-sessionize path")
 
 
 if __name__ == "__main__":

@@ -1,19 +1,22 @@
 """Analytics over session sequences (paper §5): counting, funnels, n-gram
 user models, collocations, dashboard summaries."""
-from .counting import count_events, count_pattern, rollup_counts, \
-    make_target_lut, build_rollup_keys
-from .funnel import funnel_reach, funnel_reach_users, funnel_from_patterns, \
-    build_stage_table, abandonment, reach_histogram
-from .ngram import NGramLM, ngram_counts, unpack_key, dense_ngram_counts
+from .counting import count_events, count_pattern, count_events_store, \
+    count_pattern_store, rollup_counts, make_target_lut, build_rollup_keys
+from .funnel import funnel_reach, funnel_reach_store, funnel_reach_users, \
+    funnel_from_patterns, build_stage_table, abandonment, reach_histogram
+from .ngram import NGramLM, ngram_counts, ngram_counts_store, unpack_key, \
+    dense_ngram_counts
 from .collocations import collocations, top_collocations, Collocation
 from .summary import summarize, SummaryReport, DURATION_BUCKETS
 
 __all__ = [
-    "count_events", "count_pattern", "rollup_counts", "make_target_lut",
-    "build_rollup_keys", "funnel_reach", "funnel_reach_users",
-    "funnel_from_patterns", "build_stage_table", "abandonment",
-    "reach_histogram",
-    "NGramLM", "ngram_counts", "unpack_key", "dense_ngram_counts",
+    "count_events", "count_pattern", "count_events_store",
+    "count_pattern_store", "rollup_counts", "make_target_lut",
+    "build_rollup_keys", "funnel_reach", "funnel_reach_store",
+    "funnel_reach_users", "funnel_from_patterns", "build_stage_table",
+    "abandonment", "reach_histogram",
+    "NGramLM", "ngram_counts", "ngram_counts_store", "unpack_key",
+    "dense_ngram_counts",
     "collocations", "top_collocations", "Collocation",
     "summarize", "SummaryReport", "DURATION_BUCKETS",
 ]

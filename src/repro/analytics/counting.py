@@ -54,6 +54,28 @@ def count_pattern(seqs: SessionSequences, dictionary: EventDictionary,
     return count_events(seqs, codes, dictionary.alphabet_size)
 
 
+def count_events_store(store, target_codes, alphabet_size: int, *,
+                       time_range=None, users=None) -> tuple[int, int]:
+    """The same (SUM, COUNT) read through the segment store's pruning
+    scan: segments whose code histogram lacks every target (or that miss
+    the time/user filters) are skipped before decoding. Filtering to
+    sessions *containing* a target changes neither SUM nor COUNT, so the
+    pruned answer is identical to scanning everything.
+    """
+    seqs = store.sequences(time_range=time_range, users=users,
+                           events=list(np.asarray(target_codes)))
+    return count_events(seqs, target_codes, alphabet_size)
+
+
+def count_pattern_store(store, dictionary: EventDictionary, pattern: str, *,
+                        time_range=None, users=None) -> tuple[int, int]:
+    codes = dictionary.codes_matching(pattern)
+    if len(codes) == 0:
+        return 0, 0
+    return count_events_store(store, codes, dictionary.alphabet_size,
+                              time_range=time_range, users=users)
+
+
 # ---------------------------------------------------------------------------
 # Oink roll-up aggregations (§3.2): five progressively-wildcarded schemas.
 # ---------------------------------------------------------------------------

@@ -82,6 +82,21 @@ def funnel_reach(seqs: SessionSequences, stages, alphabet_size: int,
     return [(j, int((k > j).sum())) for j in range(len(stages))]
 
 
+def funnel_reach_store(store, stages, alphabet_size: int, *,
+                       time_range=None, users=None,
+                       deepest_fn=None) -> list[tuple[int, int]]:
+    """Funnel reach through the segment store's pruning scan.
+
+    Prunes on the *stage-0* codes: a session that never enters the funnel
+    contributes zero to every stage (deepest == 0), so restricting the
+    scan to sessions containing a stage-0 event returns reach identical to
+    an unpruned scan — segments without any entry event never decode.
+    """
+    seqs = store.sequences(time_range=time_range, users=users,
+                          events=list(np.asarray(stages[0])))
+    return funnel_reach(seqs, stages, alphabet_size, deepest_fn=deepest_fn)
+
+
 def funnel_reach_users(seqs: SessionSequences, stages, alphabet_size: int):
     """Reach counted in unique *users* rather than sessions (§5.3: 'simply a
     matter of applying the unique operator prior to summing')."""

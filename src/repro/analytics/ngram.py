@@ -91,6 +91,14 @@ def ngram_counts(seqs: SessionSequences, n: int, alphabet_size: int):
     return ks[sel], np.asarray(cnts)[sel]
 
 
+def ngram_counts_store(store, n: int, alphabet_size: int, *,
+                       time_range=None, users=None):
+    """N-gram table read through the segment store (no code pruning —
+    every session contributes windows; time/user filters still prune)."""
+    seqs = store.sequences(time_range=time_range, users=users)
+    return ngram_counts(seqs, n, alphabet_size)
+
+
 def unpack_key(key: int, n: int, alphabet_size: int) -> tuple[int, ...]:
     out = []
     for _ in range(n):

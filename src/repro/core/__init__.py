@@ -15,9 +15,9 @@ from .namespace import EventName, InvalidEventName, parse, is_valid, match, \
 from .events import ClientEvent, EventBatch, EventInitiator, NameTable
 from .dictionary import EventDictionary, histogram, assign_codes
 from .sessionize import sessionize, Sessionized, DEFAULT_GAP_MS, PAD_CODE, \
-    mark_duplicate_events
+    closed_prefix_mask, mark_duplicate_events
 from .sequences import SessionSequences, code_to_codepoint, codepoint_to_code
-from .catalog import EventCatalog, CatalogEntry
+from .catalog import EventCatalog, CatalogEntry, CatalogBuilder
 from . import varint, oracle
 
 __all__ = [
@@ -26,7 +26,7 @@ __all__ = [
     "ClientEvent", "EventBatch", "EventInitiator", "NameTable",
     "EventDictionary", "histogram", "assign_codes",
     "sessionize", "Sessionized", "DEFAULT_GAP_MS", "PAD_CODE",
-    "mark_duplicate_events",
+    "closed_prefix_mask", "mark_duplicate_events",
     "SessionSequences", "code_to_codepoint", "codepoint_to_code",
-    "EventCatalog", "CatalogEntry", "varint", "oracle",
+    "EventCatalog", "CatalogEntry", "CatalogBuilder", "varint", "oracle",
 ]

@@ -5,6 +5,12 @@ name it records the frequency-ordered code, daily count, a few sample
 events, and (optionally) developer-supplied descriptions. Browsable
 hierarchically, by namespace component, or by regex — the paper's interface,
 minus the web frontend.
+
+With the segment store (``repro.data.store``) the catalog stops being an
+in-memory toy: every segment already carries a sparse code histogram in its
+metadata, so ``CatalogBuilder`` maintains the counts *incrementally* — a
+refresh folds in only segments added since the last call and retracts the
+ones compaction replaced, never re-decoding a single payload byte.
 """
 from __future__ import annotations
 
@@ -103,3 +109,67 @@ class EventCatalog:
             payload = json.load(f)
         return EventCatalog({
             n: CatalogEntry(name=n, **v) for n, v in payload.items()})
+
+    @staticmethod
+    def from_store(dictionary: EventDictionary, store,
+                   descriptions: dict[str, str] | None = None
+                   ) -> "EventCatalog":
+        """One-shot catalog from a segment store's metadata (convenience
+        over ``CatalogBuilder`` for callers without an update loop)."""
+        return CatalogBuilder(dictionary,
+                              descriptions=descriptions).refresh(store)
+
+
+class CatalogBuilder:
+    """Incremental catalog maintenance over a segment store.
+
+    ``store`` is duck-typed: anything with a ``segments`` list of objects
+    carrying ``seg_id`` and ``code_counts`` (``repro.data.store.Store``).
+    Per-segment histograms are cached by segment id, so ``refresh`` costs
+    O(segments changed): new segments (appends, compaction outputs) fold
+    in, vanished ids (segments compaction consumed) retract — counts always
+    equal a from-scratch rebuild over the live segments, which is the
+    invariant tests assert. Counts are over *stored* symbols, so the
+    catalog reflects exactly what the store serves (post-dedup,
+    post-truncation), the way the paper's daily histogram job reflects the
+    materialized log.
+    """
+
+    def __init__(self, dictionary: EventDictionary,
+                 descriptions: dict[str, str] | None = None):
+        self.dictionary = dictionary
+        self.descriptions = descriptions or {}
+        self._seen: dict[int, dict[int, int]] = {}   # seg_id -> code counts
+        self._counts: dict[int, int] = {}            # code -> running count
+        self.refreshes = 0
+        self.segments_folded = 0
+        self.segments_retracted = 0
+
+    def refresh(self, store) -> EventCatalog:
+        """Fold segment deltas since the last refresh; return the catalog."""
+        live = {seg.seg_id: seg for seg in store.segments}
+        for sid in [s for s in self._seen if s not in live]:
+            for code, c in self._seen.pop(sid).items():
+                self._counts[code] -= c
+            self.segments_retracted += 1
+        for sid, seg in live.items():
+            if sid in self._seen:
+                continue
+            counts = dict(seg.code_counts)
+            self._seen[sid] = counts
+            for code, c in counts.items():
+                self._counts[code] = self._counts.get(code, 0) + c
+            self.segments_folded += 1
+        self.refreshes += 1
+        return self.catalog()
+
+    def catalog(self) -> EventCatalog:
+        d = self.dictionary
+        entries: dict[str, CatalogEntry] = {}
+        for nid, name in enumerate(d.table.names):
+            code = int(d.code_of_name[nid])
+            entries[name] = CatalogEntry(
+                name=name, code=code,
+                count=int(self._counts.get(code, 0)),
+                description=self.descriptions.get(name, ""))
+        return EventCatalog(entries)

@@ -228,3 +228,35 @@ def sessionize(user_id, session_id, timestamp, code, ip=None, valid=None, *,
                           gap_ms=int(gap_ms), max_sessions=int(max_sessions),
                           max_len=int(max_len))
     return Sessionized(**out)
+
+
+def closed_prefix_mask(user_id, session_id, timestamp, *, gap_ms: int,
+                       watermark: int) -> np.ndarray:
+    """Per-event bool: the event's batch session is closed at
+    ``watermark`` (its segment's last event + gap is strictly below it).
+
+    Pure numpy oracle-side helper: segments are the batch sessionizer's
+    ((user, session) group split on > ``gap_ms``). Within a group, closed
+    segments are a prefix — so batch-sessionizing just the masked events
+    reproduces exactly the closed sessions. Shared by the streaming tier's
+    oracle harness (``data.streampipe``) and the segment store's compaction
+    pass (``data.store``), which partitions event segments into
+    closed-session rows vs the open residual with it.
+    """
+    u = np.asarray(user_id, np.int64)
+    s = np.asarray(session_id, np.int64)
+    t = np.asarray(timestamp, np.int64)
+    n = len(u)
+    if n == 0:
+        return np.zeros(0, bool)
+    order = np.lexsort((t, s, u))
+    us, ss, ts = u[order], s[order], t[order]
+    new_seg = np.ones(n, bool)
+    new_seg[1:] = ((us[1:] != us[:-1]) | (ss[1:] != ss[:-1])
+                   | ((ts[1:] - ts[:-1]) > gap_ms))
+    seg = np.cumsum(new_seg) - 1
+    last = np.full(int(seg[-1]) + 1, np.iinfo(np.int64).min, np.int64)
+    np.maximum.at(last, seg, ts)
+    out = np.zeros(n, bool)
+    out[order] = (last[seg] + gap_ms) < watermark
+    return out

@@ -5,12 +5,92 @@ which need fewer bytes in UTF-8 — variable-length coding for free. We
 reproduce it exactly: codes -> (surrogate-skipping) code points -> UTF-8.
 The compression benchmark (benchmarks/compression.py) measures this against
 the raw client-event log representation to validate the ~50x claim.
+
+Also here: the vectorized LEB128 codecs the segment store
+(``repro.data.store``) builds its columnar blobs from — unsigned varints
+for counts/deltas and zigzag varints for signed id columns. Both encoder
+and decoder are numpy-vectorized over the whole column (a python loop only
+over the <=10 byte positions of the widest value), so encoding a segment
+costs a handful of array passes, not a per-value interpreter loop.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from .sequences import SessionSequences, code_to_codepoint, codepoint_to_code
+
+_U64_ONE = np.uint64(1)
+
+
+def encode_uvarint(values) -> bytes:
+    """LEB128-encode a non-negative int column (vectorized).
+
+    Each value takes ``ceil(bit_length / 7)`` bytes, low 7 bits first, high
+    bit of every byte but the last set (the protobuf/Thrift wire format).
+    """
+    v = np.ascontiguousarray(np.asarray(values).astype(np.uint64))
+    if v.ndim != 1:
+        v = v.reshape(-1)
+    if v.size == 0:
+        return b""
+    n_bytes = np.ones(v.shape, np.int64)
+    for k in range(1, 10):
+        n_bytes += (v >= (_U64_ONE << np.uint64(7 * k))).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(n_bytes)[:-1]])
+    out = np.zeros(int(starts[-1] + n_bytes[-1]), np.uint8)
+    for k in range(int(n_bytes.max())):
+        m = n_bytes > k
+        byte = ((v[m] >> np.uint64(7 * k)) & np.uint64(0x7F)).astype(np.uint8)
+        cont = (n_bytes[m] > k + 1).astype(np.uint8) << 7
+        out[starts[m] + k] = byte | cont
+    return out.tobytes()
+
+
+def decode_uvarint(buf: bytes | np.ndarray, count: int,
+                   offset: int = 0) -> tuple[np.ndarray, int]:
+    """Decode ``count`` LEB128 values from ``buf[offset:]`` (vectorized).
+
+    Returns ``(values uint64, next_offset)`` so column blocks can be read
+    back to back from one segment blob.
+    """
+    if count == 0:
+        return np.zeros(0, np.uint64), offset
+    b = np.frombuffer(buf, np.uint8, offset=0)[offset:]
+    ends = np.flatnonzero((b & 0x80) == 0)
+    if len(ends) < count:
+        raise ValueError(f"uvarint blob truncated: {len(ends)} terminators "
+                         f"< {count} values")
+    ends = ends[:count]
+    starts = np.concatenate([[0], ends[:-1] + 1])
+    widths = ends - starts + 1
+    v = np.zeros(count, np.uint64)
+    for k in range(int(widths.max())):
+        m = widths > k
+        v[m] |= ((b[starts[m] + k].astype(np.uint64)) & np.uint64(0x7F)) \
+            << np.uint64(7 * k)
+    return v, offset + int(ends[-1]) + 1
+
+
+def zigzag(values) -> np.ndarray:
+    """int64 -> uint64 zigzag map (small magnitudes -> small uvarints)."""
+    v = np.asarray(values).astype(np.int64)
+    return ((v << 1) ^ (v >> 63)).view(np.uint64)
+
+
+def unzigzag(values: np.ndarray) -> np.ndarray:
+    u = np.asarray(values, np.uint64)
+    return ((u >> _U64_ONE).view(np.int64)) ^ -((u & _U64_ONE).view(np.int64))
+
+
+def encode_ivarint(values) -> bytes:
+    """Zigzag + LEB128 for signed columns (user/session ids)."""
+    return encode_uvarint(zigzag(values))
+
+
+def decode_ivarint(buf, count: int, offset: int = 0
+                   ) -> tuple[np.ndarray, int]:
+    u, offset = decode_uvarint(buf, count, offset)
+    return unzigzag(u), offset
 
 
 def utf8_length(codepoints: np.ndarray) -> np.ndarray:

@@ -23,6 +23,15 @@ Public API by module:
   ``DistPipelineConfig``, ``DistPipelineResult``,
   ``make_distributed_pipeline``, ``DistributedPipeline``,
   ``single_host_pipeline``, ``SingleHostResult``.
+* ``store`` — the unified mega-table segment store (§4.2–4.3): immutable
+  columnar segments from micro-batch writes, time-based compaction folding
+  closed event segments into session segments, and the metadata-pruning
+  ``Store.scan(time_range, users, events)`` query path every consumer
+  reads through: ``Store``, ``StoreConfig``, ``Segment``, ``ScanResult``,
+  ``ScanStats``, ``CompactionStats``, ``user_shard_mask``,
+  ``concat_sequences``, the segment codecs
+  ``encode_event_segment``/``decode_event_segment``/
+  ``encode_session_segment``/``decode_session_segment``.
 * ``streampipe`` — the streaming fast-data tier over the same collectives
   (micro-batch ticks, watermark-closed sessions, incremental psum-merged
   rollup deltas; closed-prefix bit-equal to ``distpipe``):
@@ -47,6 +56,10 @@ from .pipeline import (SessionBatchPipeline, PipelineConfig, pack_sessions,
 from .distpipe import (DistPipelineConfig, DistPipelineResult,
                        DistributedPipeline, make_distributed_pipeline,
                        single_host_pipeline, SingleHostResult)
+from .store import (Store, StoreConfig, Segment, ScanResult, ScanStats,
+                    CompactionStats, user_shard_mask, concat_sequences,
+                    encode_event_segment, decode_event_segment,
+                    encode_session_segment, decode_session_segment)
 from .streampipe import (StreamConfig, StreamResult, TickResult,
                          SingleHostStream, StreamPipeline,
                          single_host_stream, make_stream_pipeline,
@@ -65,6 +78,10 @@ __all__ = [
     "PAD_ID", "BOS_ID", "EOS_ID", "UNK_ID", "NUM_SPECIALS",
     "DistPipelineConfig", "DistPipelineResult", "DistributedPipeline",
     "make_distributed_pipeline", "single_host_pipeline", "SingleHostResult",
+    "Store", "StoreConfig", "Segment", "ScanResult", "ScanStats",
+    "CompactionStats", "user_shard_mask", "concat_sequences",
+    "encode_event_segment", "decode_event_segment",
+    "encode_session_segment", "decode_session_segment",
     "StreamConfig", "StreamResult", "TickResult", "SingleHostStream",
     "StreamPipeline", "single_host_stream", "make_stream_pipeline",
     "build_stream_tick_fn", "stream_state_structs", "replay", "split_ticks",

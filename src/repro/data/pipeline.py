@@ -90,6 +90,18 @@ class SessionBatchPipeline:
         self.rows = pack_sessions(seqs, cfg.seq_len, shuffle_seed=cfg.seed)
         self.local_batch = cfg.global_batch // cfg.num_shards
 
+    @classmethod
+    def from_store(cls, store, cfg: PipelineConfig, *, time_range=None,
+                   users=None, events=None) -> "SessionBatchPipeline":
+        """Feed the LM pipeline straight from the segment store's pruning
+        query path (``repro.data.store``): only segments whose metadata can
+        match the filters decode. Raises if matching events are still
+        un-compacted — training reads materialized sequences only.
+        """
+        seqs = store.sequences(time_range=time_range, users=users,
+                               events=events)
+        return cls(seqs, cfg)
+
     def batches_per_epoch(self) -> int:
         usable = (len(self.rows) // self.cfg.global_batch) * self.cfg.global_batch
         if usable == 0 and not self.cfg.drop_remainder:

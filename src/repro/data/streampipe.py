@@ -72,11 +72,13 @@ from ..analytics.funnel import build_stage_table, reach_histogram
 from ..analytics.ngram import dense_ngram_counts
 from ..core.sequences import SessionSequences
 from ..core.sessionize import (DEFAULT_GAP_MS, PAD_CODE, _I64_MAX,
-                               _sessionize, mark_duplicate_events)
+                               _sessionize, closed_prefix_mask,
+                               mark_duplicate_events)
 from ..dist.collectives import keyed_all_to_all, shard_of_user
 from ..dist.compat import shard_map, use_mesh
 from .distpipe import DistPipelineConfig, SingleHostResult, \
     single_host_pipeline
+from .store import Store, StoreConfig
 
 # Initial watermark / flush watermark. Not the full int64 range so that
 # ``end_ts + gap_ms`` can never overflow next to them.
@@ -355,10 +357,12 @@ def build_stream_tick_fn(mesh: Mesh, cfg: StreamConfig, n_stages: int):
 
 
 class _StreamBase:
-    """Shared host bookkeeping: watermark advance, late masks, closed-
-    session store, running totals. Subclasses implement ``_device_tick``."""
+    """Shared host bookkeeping: watermark advance, late masks, the
+    segment-store sink for closed sessions, running totals. Subclasses
+    implement ``_device_tick``."""
 
-    def __init__(self, cfg: StreamConfig, stages=None):
+    def __init__(self, cfg: StreamConfig, stages=None,
+                 store: Store | None = None):
         self.cfg = cfg
         self.stages = stages
         self.stage_table = (None if stages is None else
@@ -372,8 +376,13 @@ class _StreamBase:
         self.ngram_totals = np.zeros(cfg.alphabet_size ** cfg.ngram_n,
                                      np.int64)
         self.reach_totals = np.zeros(self.n_stages, np.int64)
-        self._parts: dict[str, list[np.ndarray]] = \
-            {k: [] for k in CLOSED_FIELDS}
+        # Closed sessions land in the unified segment store (one immutable
+        # session segment per watermark that closed any), not in host
+        # arrays — the same store the batch path compacts into. Pass a
+        # shared ``store`` to fan several streams into one mega-table.
+        self.store = store if store is not None else Store(StoreConfig(
+            gap_ms=cfg.gap_ms, dedup=cfg.dedup, max_len=cfg.max_len))
+        self._segment_ids: list[int] = []
         self.closed_total = 0
         self.late_dropped = 0
         self.shuffle_dropped = 0
@@ -422,8 +431,9 @@ class _StreamBase:
         closed, grams, reach, counters = self._device_tick(ev, wm_prev,
                                                            wm_new)
         if len(closed["length"]):
-            for k in CLOSED_FIELDS:
-                self._parts[k].append(closed[k])
+            seg = self.store.append_sessions(SessionSequences(
+                **{k: closed[k] for k in CLOSED_FIELDS}))
+            self._segment_ids.append(seg.seg_id)
         self.ngram_totals += grams.astype(np.int64)
         if self.n_stages:
             self.reach_totals += reach.astype(np.int64)
@@ -476,19 +486,11 @@ class _StreamBase:
         return max(self.max_ts_seen - self.watermark, 0)
 
     def sessions(self) -> SessionSequences:
-        """All sessions closed so far (tick order within shard order)."""
-        L = self.cfg.max_len
-        if not self._parts["length"]:
-            return SessionSequences(
-                symbols=np.zeros((0, L), np.int32),
-                length=np.zeros(0, np.int32),
-                user_id=np.zeros(0, np.int64),
-                session_id=np.zeros(0, np.int64),
-                ip=np.zeros(0, np.int64),
-                start_ts=np.zeros(0, np.int64),
-                duration_s=np.zeros(0, np.int32))
-        cat = {k: np.concatenate(v) for k, v in self._parts.items()}
-        return SessionSequences(**cat)
+        """All sessions closed so far (tick order within shard order),
+        decoded back from this stream's own session segments in the
+        store — the store is the source of truth, not host arrays."""
+        return self.store.scan(segment_ids=self._segment_ids,
+                               min_width=self.cfg.max_len).sequences
 
     def result(self) -> StreamResult:
         reach = (None if self.stage_table is None else
@@ -507,8 +509,9 @@ class SingleHostStream(_StreamBase):
     ``StreamPipeline`` and itself oracle-tested against the batch
     ``single_host_pipeline`` on every closed prefix."""
 
-    def __init__(self, cfg: StreamConfig, stages=None):
-        super().__init__(cfg, stages)
+    def __init__(self, cfg: StreamConfig, stages=None,
+                 store: Store | None = None):
+        super().__init__(cfg, stages, store)
         self._tick_jit, self.trace_counts = _single_host_tick(
             cfg, self.n_stages)
         self._ring = _init_ring_np(cfg)
@@ -538,8 +541,9 @@ class StreamPipeline(_StreamBase):
     rollup deltas. Bit-equal to ``SingleHostStream`` fed the same ticks
     (sessions compared as multisets — shard partitioning permutes order)."""
 
-    def __init__(self, mesh: Mesh, cfg: StreamConfig, stages=None):
-        super().__init__(cfg, stages)
+    def __init__(self, mesh: Mesh, cfg: StreamConfig, stages=None,
+                 store: Store | None = None):
+        super().__init__(cfg, stages, store)
         self.mesh = mesh
         self.n_shards = mesh.shape[cfg.axis]
         self.trace_counts = collections.Counter()
@@ -574,51 +578,24 @@ class StreamPipeline(_StreamBase):
         return closed, np.asarray(grams), np.asarray(reach), counters
 
 
-def single_host_stream(cfg: StreamConfig, stages=None) -> SingleHostStream:
-    """Build the single-host streaming oracle path."""
-    return SingleHostStream(cfg, stages)
+def single_host_stream(cfg: StreamConfig, stages=None,
+                       store: Store | None = None) -> SingleHostStream:
+    """Build the single-host streaming oracle path. ``store`` is the
+    segment store closed sessions sink into (default: a fresh one)."""
+    return SingleHostStream(cfg, stages, store)
 
 
-def make_stream_pipeline(mesh: Mesh, cfg: StreamConfig,
-                         stages=None) -> StreamPipeline:
+def make_stream_pipeline(mesh: Mesh, cfg: StreamConfig, stages=None,
+                         store: Store | None = None) -> StreamPipeline:
     """Build the distributed streaming pipeline over ``mesh[cfg.axis]``.
     ``stages`` is the optional funnel spec, as in
-    ``make_distributed_pipeline``."""
-    return StreamPipeline(mesh, cfg, stages)
+    ``make_distributed_pipeline``; ``store`` the shared segment store."""
+    return StreamPipeline(mesh, cfg, stages, store)
 
 
 # ---------------------------------------------------------------------------
 # replay harness + batch oracle helpers
 # ---------------------------------------------------------------------------
-
-def closed_prefix_mask(user_id, session_id, timestamp, *, gap_ms: int,
-                       watermark: int) -> np.ndarray:
-    """Per-event bool: the event's batch session is closed at
-    ``watermark`` (its segment's last event + gap is strictly below it).
-
-    Pure numpy oracle-side helper: segments are the batch sessionizer's
-    ((user, session) group split on > ``gap_ms``). Within a group, closed
-    segments are a prefix — so batch-sessionizing just the masked events
-    reproduces exactly the stream's closed sessions.
-    """
-    u = np.asarray(user_id, np.int64)
-    s = np.asarray(session_id, np.int64)
-    t = np.asarray(timestamp, np.int64)
-    n = len(u)
-    if n == 0:
-        return np.zeros(0, bool)
-    order = np.lexsort((t, s, u))
-    us, ss, ts = u[order], s[order], t[order]
-    new_seg = np.ones(n, bool)
-    new_seg[1:] = ((us[1:] != us[:-1]) | (ss[1:] != ss[:-1])
-                   | ((ts[1:] - ts[:-1]) > gap_ms))
-    seg = np.cumsum(new_seg) - 1
-    last = np.full(int(seg[-1]) + 1, np.iinfo(np.int64).min, np.int64)
-    np.maximum.at(last, seg, ts)
-    out = np.zeros(n, bool)
-    out[order] = (last[seg] + gap_ms) < watermark
-    return out
-
 
 def batch_closed_prefix(cfg: StreamConfig, stages, user_id, session_id,
                         timestamp, code, ip, accepted,

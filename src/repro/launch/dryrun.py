@@ -31,6 +31,7 @@ Usage:
       --mesh single --mode full
   python -m repro.launch.dryrun --pipeline hour_1m --mesh single
   python -m repro.launch.dryrun --stream tick_64k --mesh single
+  python -m repro.launch.dryrun --store compact_1m
   python -m repro.launch.dryrun --all            # full sweep (both meshes)
 """
 import argparse
@@ -311,6 +312,70 @@ def run_stream_cell(shape_name: str, mesh_kind: str,
     )
 
 
+STORE_SHAPES = {
+    "compact_256k": 1 << 18,
+    "compact_1m": 1 << 20,
+}
+
+
+def make_store_cell(n_events: int, *, max_len: int = 256,
+                    gap_ms: int = 30 * 60 * 1000):
+    """(fn, args) for the segment store's compaction kernel
+    (data/store.py): the fused sort + segment sessionizer over the closed
+    events of the folded segments, at worst-case caps (every event its own
+    session). No mesh — compaction runs on the host that owns the store;
+    the cell exists for the memory roofline (the (max_sessions, max_len)
+    scatter grid dominates) and the sort/segment FLOPs.
+    """
+    import functools
+    from ..core.sessionize import _sessionize
+
+    fn = functools.partial(_sessionize, gap_ms=gap_ms,
+                           max_sessions=n_events, max_len=max_len)
+    sds = jax.ShapeDtypeStruct
+    args = (sds((n_events,), np.int64), sds((n_events,), np.int64),
+            sds((n_events,), np.int64), sds((n_events,), np.int32),
+            sds((n_events,), np.int64), sds((n_events,), bool))
+    return fn, args
+
+
+def run_store_cell(shape_name: str, mesh_kind: str,
+                   overrides: dict | None = None, tag: str = "") -> dict:
+    """Lower + compile the store compaction kernel; same roofline
+    extraction as the other cells (collective bytes are zero — the pass is
+    single-host by design, the segments were already user-sharded)."""
+    from jax.experimental import enable_x64
+    from ..dist.compat import cost_analysis
+
+    n_events = STORE_SHAPES[shape_name]
+    t0 = time.time()
+    fn, args = make_store_cell(n_events, **(overrides or {}))
+    jitted = jax.jit(fn)
+    with enable_x64():
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = cost_analysis(compiled)
+    return dict(
+        arch="store", shape=shape_name, mesh=mesh_kind, mode="cost",
+        tag=tag, skipped=False, n_events=n_events,
+        overrides=overrides or {},
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+            output_bytes=getattr(mem, "output_size_in_bytes", None),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+            alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+        ),
+        flops=cost.get("flops"),
+        bytes_accessed=cost.get("bytes accessed"),
+        utilization=cost.get("utilization", None),
+        collectives=collective_bytes(compiled.as_text()),
+    )
+
+
 def result_path(arch, shape, mesh, mode, tag=""):
     name = f"{arch}__{shape}__{mesh}__{mode}{('__' + tag) if tag else ''}.json"
     return os.path.join(RESULTS_DIR, name)
@@ -331,22 +396,29 @@ def main():
                     help="lower+compile one streaming micro-batch tick "
                          "(data/streampipe.py) at this tick shape instead "
                          "of a model cell")
+    ap.add_argument("--store", choices=sorted(STORE_SHAPES),
+                    help="lower+compile the segment-store compaction "
+                         "kernel (data/store.py) at this closed-event "
+                         "count instead of a model cell")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
 
-    if args.pipeline or args.stream:
+    if args.pipeline or args.stream or args.store:
         if args.arch or args.shape or args.mode != "full" or args.all \
-                or (args.pipeline and args.stream):
-            ap.error("--pipeline/--stream are their own cell kinds; they "
-                     "cannot be combined with each other or with "
+                or sum(map(bool, (args.pipeline, args.stream,
+                                  args.store))) > 1:
+            ap.error("--pipeline/--stream/--store are their own cell kinds; "
+                     "they cannot be combined with each other or with "
                      "--arch/--shape/--mode/--all (collective bytes are "
                      "always extracted, i.e. cost mode)")
-        kind = "pipeline" if args.pipeline else "stream"
-        shape = args.pipeline or args.stream
-        runner = run_pipeline_cell if args.pipeline else run_stream_cell
+        kind = ("pipeline" if args.pipeline
+                else "stream" if args.stream else "store")
+        shape = args.pipeline or args.stream or args.store
+        runner = {"pipeline": run_pipeline_cell, "stream": run_stream_cell,
+                  "store": run_store_cell}[kind]
         try:
             res = runner(shape, args.mesh, json.loads(args.overrides),
                          args.tag)
