@@ -24,15 +24,30 @@ through the same pool with ``prefix_cache`` off vs on: sharing must admit
 hit requests (only the divergent tail prefills), and stay bit-equal to
 the cold-cache outputs (all asserted).
 
-Finally the **DecodeState family rows**: ``serve_ssm`` (recurrent rows)
+The **DecodeState family rows**: ``serve_ssm`` (recurrent rows)
 and ``serve_encdec`` (cross-attention stacks with per-request frame
 extras) drive the same scheduler machinery end to end — zero retraces
 asserted — proving continuous batching is family-agnostic, not a dense
-special case. With ``run.py --json`` everything lands machine-readably in
-``BENCH_serve.json`` (the family rows under ``families``).
+special case.
+
+Finally ``serve_slo`` retires the t=0 closed-loop drain for the question
+that actually matters under "heavy traffic": **tail latency under bursty
+open-loop arrivals**. A seeded Poisson-burst stream (mixed short/long
+prompts, two priority classes) is replayed on a virtual clock (one unit
+per scheduler step — fully deterministic, no wall time) through the same
+pool twice: honest worst-case reservation (``overcommit=1.0``) vs
+optimistic admission (``overcommit=2.0``) with priority preemption. The
+row gates on over-commit admission gain >= 1.3x at equal slab bytes,
+high-priority p99 latency no worse than the reservation baseline, at
+least one actual preemption (the recovery path really ran), outputs
+bit-equal to the never-preempted baseline, and zero retraces after
+warmup. With ``run.py --json`` everything lands machine-readably in
+``BENCH_serve.json`` (family rows under ``families``, the SLO row under
+``slo``).
 
 Rows report tokens/sec plus the p50/p99 per-request latency derived from
-the t=0 queue-arrival model.
+the arrival model (t=0 queue for the closed-loop rows, seeded bursts for
+``serve_slo``).
 """
 from __future__ import annotations
 
@@ -40,7 +55,7 @@ import time
 
 import numpy as np
 
-from .common import row
+from .common import row, bursty_arrivals, VirtualClock
 
 # populated by run(); written to JSON_PATH by `benchmarks.run --json`
 JSON_PATH = "BENCH_serve.json"
@@ -302,8 +317,121 @@ def run() -> list[str]:
             p99_latency_s=fs["p99_latency_s"],
             peak_resident_bytes=fs["kv_peak_resident_bytes"])
 
+    # -- SLO under bursty open-loop load: over-commit vs honest reservation
+    # Same slab as serve_paged (31 x 8-token blocks == 4 dense stripes),
+    # bigger slot table so admission is gated by blocks, not rows. The
+    # stream mixes short (2-block worst case) and long (3-4 block) requests
+    # in Poisson bursts; ~25% ride the high-priority class.
+    slo_slots, n_slo = 24, 40
+    arrivals = bursty_arrivals(n_slo, mean_gap=6.0, burst_mean=8.0, seed=17)
+    srng = np.random.default_rng(17)
+    slo_stream = []
+    for t in arrivals:
+        # every prompt is one block; budgets split the worst case 2 vs 4
+        # blocks — exactly the shape where the honest reservation wastes
+        # the most (requests hold 1 block at admission, grow lazily, and
+        # often hit EOS before their worst case)
+        if srng.random() < 0.4:          # long budget: 4-block worst case
+            p, b = srng.integers(4, 64, int(srng.integers(4, 9))), 20
+        else:                            # short budget: 2-block worst case
+            p, b = srng.integers(4, 64, int(srng.integers(4, 9))), 6
+        prio = 1 if srng.random() < 0.25 else 0
+        slo_stream.append((float(t), p.astype(np.int32), int(b), prio))
+
+    def open_loop(sched, clock):
+        """Open-loop drive: requests appear at their seeded arrival times
+        (submit stamped at the true arrival), the clock advances one unit
+        per scheduler step, idle gaps fast-forward. Returns (peak
+        concurrently admitted, {rid: outputs})."""
+        i, peak = 0, 0
+        while i < len(slo_stream) or sched.num_active or sched.num_pending:
+            if not (sched.num_active or sched.num_pending):
+                clock.now = max(clock.now, slo_stream[i][0])
+            now = clock.now
+            while i < len(slo_stream) and slo_stream[i][0] <= now:
+                t, p, b, prio = slo_stream[i]
+                clock.now = t
+                sched.submit(p, max_new_tokens=b, priority=prio)
+                i += 1
+            clock.now = now
+            sched.step()
+            peak = max(peak, sched.num_active)
+            clock.advance(1.0)
+        return peak, sched.run()
+
+    def slo_run(factor):
+        clock = VirtualClock()
+        sched = ContinuousScheduler(api, params, SchedulerConfig(
+            batch=slo_slots, buckets=(8, 16, 32), max_new_tokens=20,
+            paged=True, block_size=block_size, num_blocks=pool_blocks,
+            overcommit=factor, debug=True))
+        open_loop(sched, clock)                      # warmup (jit traces)
+        warm = dict(sched.trace_counts)
+        clock.now = 0.0
+        sched.metrics = ServeMetrics(clock=clock)
+        peak, outs = open_loop(sched, clock)
+        assert dict(sched.trace_counts) == warm, \
+            f"slo scheduler (overcommit={factor}) recompiled after warmup"
+        sched.pool.check_invariants()
+        return peak, outs, sched.metrics.summary(), sched
+
+    base_peak, base_outs, bsum, base_sched = slo_run(1.0)
+    oc_peak, oc_outs, osum, oc_sched = slo_run(2.0)
+
+    assert oc_sched.pool.slab_bytes == base_sched.pool.slab_bytes
+    assert bsum["preemptions"] == 0, "honest reservation preempted"
+    slo_bit_equal = all(
+        np.array_equal(base_outs[a], oc_outs[b])
+        for a, b in zip(sorted(base_outs), sorted(oc_outs)))
+    assert slo_bit_equal, \
+        "preempted outputs diverge from the never-preempted baseline"
+    slo_gain = oc_peak / max(base_peak, 1)
+    assert slo_gain >= 1.3, \
+        f"over-commit admitted {oc_peak} < 1.3x baseline {base_peak}"
+    assert osum["preemptions"] >= 1, \
+        "over-commit stream never exercised the preemption path"
+    hi_base = bsum["per_priority"][1]["p99_latency_s"]
+    hi_oc = osum["per_priority"][1]["p99_latency_s"]
+    assert hi_oc <= hi_base, \
+        f"hi-pri p99 regressed under over-commit: {hi_oc} > {hi_base}"
+    rows.append(row(
+        "serve_slo", osum["p99_latency_s"],
+        f"admitted={oc_peak} vs {base_peak} honest "
+        f"(gain {slo_gain:.2f}x) preempts={osum['preemptions']} "
+        f"hi-p99={hi_oc:.0f} vs {hi_base:.0f} steps "
+        f"qwait-p99={osum['p99_queue_wait_s']:.0f} steps "
+        f"bit_equal={slo_bit_equal} 0 retraces"))
+
+    def _slo_side(peak, s):
+        return dict(
+            admitted_peak=int(peak), preemptions=int(s["preemptions"]),
+            p50_latency_steps=s["p50_latency_s"],
+            p99_latency_steps=s["p99_latency_s"],
+            p99_queue_wait_steps=s["p99_queue_wait_s"],
+            p99_ttft_steps=s["p99_ttft_s"],
+            per_priority={
+                str(k): dict(requests=v["requests"],
+                             preemptions=v["preemptions"],
+                             p99_latency_steps=v["p99_latency_s"],
+                             p99_queue_wait_steps=v["p99_queue_wait_s"])
+                for k, v in s["per_priority"].items()})
+
+    slo_json = dict(
+        stream=dict(requests=n_slo, mean_gap=6.0, burst_mean=8.0, seed=17,
+                    slots=slo_slots, num_blocks=pool_blocks,
+                    block_size=block_size, overcommit=2.0),
+        baseline=_slo_side(base_peak, bsum),
+        overcommit=_slo_side(oc_peak, osum),
+        admission_gain=slo_gain,
+        hi_pri_p99_baseline_steps=hi_base,
+        hi_pri_p99_overcommit_steps=hi_oc,
+        preemptions=int(osum["preemptions"]),
+        bit_equal=bool(slo_bit_equal),
+    )
+
     global LAST_JSON
     LAST_JSON = dict(
+        slo=slo_json,
         families=families_json,
         stream=dict(requests=n_short, prompt_len="4..8", budget=budget,
                     model="behavior-lm-100m-smoke",

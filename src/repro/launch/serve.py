@@ -77,10 +77,28 @@ def main():
                          "prompts whose leading blocks are already "
                          "resident share them copy-free (refcounted) and "
                          "prefill only the divergent tail")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="optimistic admission factor on top of --paged: "
+                         "reserve up to this multiple of pool capacity; "
+                         "actual exhaustion mid-decode preempts the "
+                         "lowest-priority request (1.0 = honest "
+                         "worst-case reservation, the default)")
+    ap.add_argument("--priority", type=int, default=1,
+                    help="number of priority classes: requests are "
+                         "assigned a seeded random class in [0, N); "
+                         "higher classes admit first and are preempted "
+                         "last (1 = everything priority 0)")
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged (it shares blocks of "
                  "the paged KV pool)")
+    if args.overcommit > 1.0 and not args.paged:
+        ap.error("--overcommit > 1.0 requires --paged (only the block "
+                 "pool can preempt on exhaustion)")
+    if args.overcommit < 1.0:
+        ap.error("--overcommit must be >= 1.0")
+    if args.priority < 1:
+        ap.error("--priority must be >= 1 class")
     if args.batch and args.continuous:
         ap.error("--batch and --continuous are mutually exclusive")
 
@@ -147,14 +165,20 @@ def main():
         max_new_tokens=args.max_new_tokens,
         temperature=args.temperature, paged=args.paged,
         block_size=args.block_size,
-        prefix_cache=args.prefix_cache), metrics=metrics)
+        prefix_cache=args.prefix_cache,
+        overcommit=args.overcommit), metrics=metrics)
+    # over-commit caps the prompt so a preempted request's re-prefill
+    # (prompt + generated) always fits the largest compiled bucket
+    max_prompt = 33 if args.overcommit <= 1.0 else \
+        max(4, 64 - args.max_new_tokens + 1)
     rids = []
     for i in range(n_req):
         row = pipe.batch_at(0, i % slots)["tokens"]
         row = np.asarray(row[i % row.shape[0]])
-        n = int(rng.integers(4, 33))        # variable prompt lengths
+        n = int(rng.integers(4, min(33, max_prompt + 1)))
         n = min(n, int(prompt_lengths(row[None])[0]))  # stay on real toks
-        rids.append(sched.submit(row[:n], extra=_request_extras(cfg, rng)))
+        rids.append(sched.submit(row[:n], extra=_request_extras(cfg, rng),
+                                 priority=int(rng.integers(args.priority))))
     outs = sched.run()
     for rid in rids[:slots]:
         names = _decode_names(outs[rid], d, NUM_SPECIALS)
@@ -164,6 +188,17 @@ def main():
     print("served {requests} requests, {tokens} tokens, "
           "{tokens_per_sec:.1f} tok/s, p50 latency {p50_latency_s:.3f}s,"
           " p99 {p99_latency_s:.3f}s".format(**summ))
+    print("queue wait p50 {p50_queue_wait_s:.4f}s / p99 "
+          "{p99_queue_wait_s:.4f}s, admitted TTFT p50 "
+          "{p50_ttft_admit_s:.4f}s".format(**summ))
+    if args.overcommit > 1.0 or args.priority > 1:
+        print(f"over-commit {args.overcommit}x: "
+              f"{summ['preemptions']} preemption(s)")
+        for prio, ps in sorted(summ["per_priority"].items(), reverse=True):
+            print("  class {p}: {requests} requests, {n} preemption(s), "
+                  "p99 latency {p99_latency_s:.3f}s, p99 queue wait "
+                  "{p99_queue_wait_s:.4f}s".format(
+                      p=prio, n=ps["preemptions"], **ps))
     if summ["kv_total_blocks"]:
         print("decode state: peak {kv_live_blocks_peak}/{kv_total_blocks} "
               "{unit} live ({kv_util_peak:.0%}), peak resident "

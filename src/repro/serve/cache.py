@@ -50,8 +50,8 @@ import numpy as np
 
 from ..dist.sharding import tree_shardings
 from ..models.registry import ModelApi
-from .paged import (BlockPool, PrefixPlan, PREFIX_SEED, blocks_for,
-                    prefix_hashes)
+from .paged import (BlockPool, PoolExhausted, PrefixPlan, PREFIX_SEED,
+                    blocks_for, prefix_hashes)
 
 
 def _uncounted(name, fn):
@@ -308,7 +308,9 @@ class PagedKVState(DenseKVState):
         num_blocks = (cfg.batch * self._max_blocks
                       if cfg.num_blocks is None else cfg.num_blocks)
         self.pool = BlockPool.for_model(
-            api.cfg, num_blocks=num_blocks, block_size=cfg.block_size)
+            api.cfg, num_blocks=num_blocks, block_size=cfg.block_size,
+            overcommit=getattr(cfg, "overcommit", 1.0),
+            debug=getattr(cfg, "debug", False))
         super().__init__(api, cfg, params, mesh=mesh, counted=counted)
 
     def _validate(self):
@@ -409,10 +411,16 @@ class PagedKVState(DenseKVState):
                           hashes=hashes, tokens=toks)
 
     def can_admit(self, prompt_len: int, budget: int, plan=None) -> bool:
-        need = self.pool.blocks_needed(prompt_len, budget)
-        if plan is not None:
-            need -= len(plan.shared)      # shared blocks are already resident
-        return self.pool.can_reserve(need)
+        m = len(plan.shared) if plan is not None else 0
+        # shared blocks are already resident: they shrink both the
+        # worst-case reservation and the prompt blocks taken at admission
+        need = self.pool.blocks_needed(prompt_len, budget) - m
+        own_now = blocks_for(prompt_len, self.cfg.block_size) - m
+        # under over-commit the reservation gate alone is not enough: the
+        # prompt's own blocks are taken *at admission*, so they must exist
+        # on the free list right now (admission never preempts — only
+        # mid-decode growth does)
+        return self.pool.can_reserve(need) and self.pool.free_blocks >= own_now
 
     def admit(self, slot: int, prompt_len: int, budget: int,
               plan=None) -> None:
@@ -507,9 +515,13 @@ class PagedKVState(DenseKVState):
 
     def decode_view(self, positions, active):
         """Lazy table growth: map a fresh block the moment a row's write
-        position crosses into it (the admission reservation guarantees
-        ``take`` succeeds), then refresh the device table copy — same
-        shape every step, so the jitted decode never retraces."""
+        position crosses into it, then refresh the device table copy —
+        same shape every step, so the jitted decode never retraces. With
+        honest reservations (overcommit=1.0) ``take`` always succeeds;
+        under over-commit it may raise ``PoolExhausted``, which propagates
+        to the scheduler's preempt-and-retry loop — safe because rows
+        already grown this call just pass the length check on retry and
+        ``take`` raises before touching pool state."""
         for slot in np.flatnonzero(active):
             b_idx = int(positions[slot]) // self.cfg.block_size
             if b_idx >= len(self._blocks[slot]):
@@ -532,6 +544,8 @@ class PagedKVState(DenseKVState):
         self._reserved[slot] = 0
         self._shared[slot] = 0
         self._table[slot, :] = 0     # dead-row writes -> trash block
+        if self.pool.debug:
+            self.pool.check_invariants()
 
     # -- metrics -----------------------------------------------------------
 
@@ -570,6 +584,15 @@ def make_decode_state(api: ModelApi, cfg, params, mesh=None,
             "prefix_cache=True requires paged=True: prefix sharing maps "
             "resident pool blocks into new requests' block tables, which "
             "only exist in paged mode")
+    overcommit = getattr(cfg, "overcommit", 1.0)
+    if overcommit < 1.0:
+        raise ValueError(
+            f"overcommit must be >= 1.0, got {overcommit}")
+    if overcommit > 1.0 and not cfg.paged:
+        raise ValueError(
+            "overcommit > 1.0 requires paged=True: only the block pool "
+            "can admit past its worst-case reservation and preempt on "
+            "exhaustion — dense rows are pinned for a request's lifetime")
     if cfg.paged:
         if not caps.paged:
             raise ValueError(

@@ -3,8 +3,20 @@
 One ``ServeMetrics`` instance rides along a scheduler (or a batch
 ``Server.generate`` call) and timestamps the request lifecycle:
 submit -> admit (slot granted) -> first token -> finish. ``summary()``
-derives the numbers the serving story is judged on — tokens/sec and the
-p50/p99 of per-request latency and time-to-first-token.
+derives the numbers the serving story is judged on — tokens/sec, the
+p50/p99 of per-request latency and time-to-first-token, and the
+**queue-wait split**: TTFT (submit -> first token) decomposes into
+queue wait (submit -> first admission) plus admitted TTFT (first
+admission -> first token, the prefill the request actually ran), both
+exposed separately so a loaded benchmark can tell scheduling delay from
+compute delay.
+
+Requests carry a **priority class**; ``summary()["per_priority"]``
+breaks latency, TTFT, queue wait, and preemption counts out per class —
+the numbers the SLO gate in ``benchmarks/serve_tput.py`` judges
+over-commit serving on. ``record_preempt`` counts each time a request is
+preempted (its ``admit`` stamp keeps the *first* admission, so queue
+wait stays submit -> first grant across requeue cycles).
 
 The clock is injectable so tests can drive it deterministically.
 """
@@ -17,11 +29,13 @@ from dataclasses import dataclass, field
 @dataclass
 class RequestTiming:
     submit: float | None = None
-    admit: float | None = None
+    admit: float | None = None       # FIRST admission (stable under requeue)
     first_token: float | None = None
     finish: float | None = None
     tokens: int = 0
     prompt_len: int = 0
+    priority: int = 0
+    preemptions: int = 0             # times this request was preempted
     # prefix-cache accounting (paged + prefix_cache only)
     prefix_blocks_reused: int = 0    # resident blocks mapped copy-free
     prefill_tokens_skipped: int = 0  # prompt tokens served from resident K/V
@@ -83,13 +97,23 @@ class ServeMetrics:
         r.prefill_tokens_skipped = int(tokens_skipped)
         r.prefix_hit = blocks_reused > 0 or tokens_skipped > 0
 
-    def record_submit(self, rid: int, prompt_len: int = 0) -> None:
+    def record_submit(self, rid: int, prompt_len: int = 0,
+                      priority: int = 0) -> None:
         r = self._rec(rid)
         r.submit = self.clock()
         r.prompt_len = prompt_len
+        r.priority = int(priority)
 
     def record_admit(self, rid: int) -> None:
-        self._rec(rid).admit = self.clock()
+        """Stamp the FIRST admission only: a preempted request re-admits,
+        but its queue wait is submit -> first slot grant — requeue delay
+        shows up in end-to-end latency, not in queue wait."""
+        r = self._rec(rid)
+        if r.admit is None:
+            r.admit = self.clock()
+
+    def record_preempt(self, rid: int) -> None:
+        self._rec(rid).preemptions += 1
 
     def record_token(self, rid: int) -> None:
         r = self._rec(rid)
@@ -137,13 +161,55 @@ class ServeMetrics:
             mean_ttft_miss_s=mean_ttft(misses),
         )
 
+    @staticmethod
+    def _latency_stats(rs: list[RequestTiming]) -> dict:
+        """p50/p99 latency, TTFT (submit -> first token), queue wait
+        (submit -> first admission), and admitted TTFT (first admission ->
+        first token) over one set of finished requests. TTFT = queue wait
+        + admitted TTFT per request, exposed separately so scheduling
+        delay and prefill compute are never conflated again."""
+        lat = [r.finish - r.submit for r in rs if r.submit is not None]
+        ttft = [r.first_token - r.submit for r in rs
+                if r.submit is not None and r.first_token is not None]
+        qwait = [r.admit - r.submit for r in rs
+                 if r.submit is not None and r.admit is not None]
+        attft = [r.first_token - r.admit for r in rs
+                 if r.admit is not None and r.first_token is not None]
+        return dict(
+            p50_latency_s=_percentile(lat, 50),
+            p99_latency_s=_percentile(lat, 99),
+            p50_ttft_s=_percentile(ttft, 50),
+            p99_ttft_s=_percentile(ttft, 99),
+            p50_queue_wait_s=_percentile(qwait, 50),
+            p99_queue_wait_s=_percentile(qwait, 99),
+            p50_ttft_admit_s=_percentile(attft, 50),
+            p99_ttft_admit_s=_percentile(attft, 99),
+        )
+
+    def _per_priority(self, done: list[RequestTiming]) -> dict[int, dict]:
+        """Per-class rollup: latency/TTFT/queue-wait percentiles over the
+        class's finished requests, preemption counts over every request
+        of the class (a preempted-but-unfinished request still counts)."""
+        out: dict[int, dict] = {}
+        for p in sorted({r.priority for r in self.requests.values()}):
+            rs = [r for r in done if r.priority == p]
+            out[p] = dict(
+                requests=len(rs),
+                preemptions=sum(r.preemptions
+                                for r in self.requests.values()
+                                if r.priority == p),
+                **self._latency_stats(rs))
+        return out
+
     def summary(self) -> dict:
         done = [r for r in self.requests.values() if r.finish is not None]
         total_tokens = sum(r.tokens for r in self.requests.values())
+        preemptions = sum(r.preemptions for r in self.requests.values())
         if not done:
             return dict(requests=0, tokens=total_tokens,
-                        tokens_per_sec=0.0, p50_latency_s=0.0,
-                        p99_latency_s=0.0, p50_ttft_s=0.0, p99_ttft_s=0.0,
+                        tokens_per_sec=0.0, preemptions=preemptions,
+                        per_priority=self._per_priority([]),
+                        **self._latency_stats([]),
                         **self._kv_summary(), **self._prefix_summary())
         t0 = min(r.submit for r in done if r.submit is not None)
         t1 = max(r.finish for r in done)
@@ -152,17 +218,13 @@ class ServeMetrics:
         # wall span — in-flight tokens would inflate it against a shorter
         # denominator when summary() is read mid-stream
         done_tokens = sum(r.tokens for r in done)
-        lat = [r.finish - r.submit for r in done if r.submit is not None]
-        ttft = [r.first_token - r.submit for r in done
-                if r.submit is not None and r.first_token is not None]
         return dict(
             requests=len(done),
             tokens=total_tokens,
             tokens_per_sec=done_tokens / wall,
-            p50_latency_s=_percentile(lat, 50),
-            p99_latency_s=_percentile(lat, 99),
-            p50_ttft_s=_percentile(ttft, 50),
-            p99_ttft_s=_percentile(ttft, 99),
+            preemptions=preemptions,
+            per_priority=self._per_priority(done),
+            **self._latency_stats(done),
             **self._kv_summary(),
             **self._prefix_summary(),
         )

@@ -25,10 +25,14 @@ Layout and invariants:
 * Admission **reserves** a request's worst case up front
   (``blocks_needed`` = ceil((prompt_len + budget - 1) / block_size)) but
   **allocates lazily**: the prompt's blocks at admission, then one block
-  at a time as decode crosses each block boundary. Reservation makes
-  mid-decode exhaustion impossible (no preemption machinery needed) while
-  the lazy table growth keeps ``live_blocks`` — and the utilization
-  metric — honest about what is actually written.
+  at a time as decode crosses each block boundary. With the default
+  ``overcommit=1.0`` reservations are honest — the free list always
+  covers them, so mid-decode exhaustion is impossible. With
+  ``overcommit > 1`` admission is **optimistic**: reservations may sum to
+  ``overcommit * capacity`` (requests that hit EOS early never claim
+  their worst case, so real capacity usually suffices), and the day the
+  bet loses — ``take`` finds the free list empty — ``PoolExhausted`` is
+  raised for the scheduler to preempt a victim and retry.
 * A per-request **block table** is padded to ``max_blocks`` entries
   (``max_cache_len / block_size``); unallocated entries are 0 (trash), so
   gathering through the table always reads in-bounds memory and per-row
@@ -63,6 +67,16 @@ from ..models.config import ModelConfig
 # Root of every prefix hash chain. Versioned so a future layout change
 # cannot alias stale hashes.
 PREFIX_SEED = b"repro-prefix-cache-v1"
+
+
+class PoolExhausted(RuntimeError):
+    """``take`` found the free list empty under over-commit admission.
+
+    Only reachable with ``overcommit > 1``: honest reservations guarantee
+    a free block for every reserved unit. The scheduler catches this,
+    preempts the lowest-priority (ties: youngest) victim to free its
+    blocks, and retries the allocation.
+    """
 
 
 def blocks_for(positions: int, block_size: int) -> int:
@@ -131,11 +145,20 @@ class BlockPool:
 
     def __init__(self, *, num_blocks: int, block_size: int,
                  num_kv_heads: int, head_dim: int, num_layers: int,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, overcommit: float = 1.0,
+                 debug: bool = False):
         if num_blocks < 1:
             raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if overcommit < 1.0:
+            raise ValueError(
+                f"overcommit must be >= 1.0 (1.0 = honest worst-case "
+                f"reservation), got {overcommit}")
+        self.overcommit = float(overcommit)
+        # when set, ``check_invariants`` runs automatically after every
+        # evict/preempt-driven free (see PagedKVState.evict)
+        self.debug = bool(debug)
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
         self.num_kv_heads = int(num_kv_heads)
@@ -156,11 +179,13 @@ class BlockPool:
 
     @classmethod
     def for_model(cls, cfg: ModelConfig, *, num_blocks: int,
-                  block_size: int) -> "BlockPool":
+                  block_size: int, overcommit: float = 1.0,
+                  debug: bool = False) -> "BlockPool":
         return cls(num_blocks=num_blocks, block_size=block_size,
                    num_kv_heads=cfg.num_kv_heads,
                    head_dim=cfg.resolved_head_dim,
-                   num_layers=cfg.num_layers, dtype=jnp.dtype(cfg.dtype))
+                   num_layers=cfg.num_layers, dtype=jnp.dtype(cfg.dtype),
+                   overcommit=overcommit, debug=debug)
 
     # -- capacity accounting ----------------------------------------------
 
@@ -170,9 +195,22 @@ class BlockPool:
         return self.num_blocks
 
     @property
+    def virtual_capacity(self) -> int:
+        """Capacity admission reserves against: real blocks scaled by the
+        over-commit factor (== ``capacity`` at the default 1.0)."""
+        return int(self.num_blocks * self.overcommit)
+
+    @property
+    def free_blocks(self) -> int:
+        """Blocks ``take`` can hand out *right now* — under over-commit
+        this can be far below what reservations promise."""
+        return len(self._free)
+
+    @property
     def available(self) -> int:
-        """Blocks a new reservation may still claim."""
-        return len(self._free) - self._reserved
+        """Blocks a new reservation may still claim: virtual capacity
+        minus everything resident or already promised."""
+        return self.virtual_capacity - self.live_blocks - self._reserved
 
     @property
     def live_blocks(self) -> int:
@@ -230,9 +268,17 @@ class BlockPool:
             if self._refs[blk] == 0:
                 raise AssertionError(
                     f"hash registry holds dead block {blk}")
-        if not 0 <= self._reserved <= len(self._free):
+        if self._reserved < 0:
+            raise AssertionError(f"negative reservation {self._reserved}")
+        if self.live_blocks + self._reserved > self.virtual_capacity:
             raise AssertionError(
-                f"{self._reserved} reserved with {len(self._free)} free")
+                f"live ({self.live_blocks}) + reserved ({self._reserved}) "
+                f"exceeds virtual capacity ({self.virtual_capacity} = "
+                f"{self.capacity} x {self.overcommit})")
+        if self.overcommit == 1.0 and self._reserved > len(self._free):
+            raise AssertionError(
+                f"{self._reserved} reserved with {len(self._free)} free "
+                "under honest (overcommit=1.0) reservation")
 
     # -- reservation + allocation -----------------------------------------
 
@@ -243,7 +289,8 @@ class BlockPool:
         if not self.can_reserve(n):
             raise ValueError(
                 f"cannot reserve {n} blocks: {self.available} available "
-                f"({len(self._free)} free - {self._reserved} reserved)")
+                f"({self.virtual_capacity} virtual capacity - "
+                f"{self.live_blocks} live - {self._reserved} reserved)")
         self._reserved += n
 
     def cancel(self, n: int) -> None:
@@ -255,11 +302,18 @@ class BlockPool:
 
     def take(self) -> int:
         """Convert one reserved unit into a concrete block id at refcount
-        1. O(1). Never returns block 0 (the trash block)."""
+        1. O(1). Never returns block 0 (the trash block). Raises
+        ``PoolExhausted`` when the free list is empty — reachable only
+        under over-commit (honest reservations always have a free block
+        behind them); the scheduler preempts a victim and retries."""
         if self._reserved <= 0:
             raise ValueError("take() without a reservation")
-        if not self._free:  # unreachable while reservations are honest
-            raise ValueError("free list empty with reservations outstanding")
+        if not self._free:
+            raise PoolExhausted(
+                f"free list empty with {self._reserved} reserved blocks "
+                f"outstanding (over-commit {self.overcommit}x: "
+                f"{self.live_blocks}/{self.capacity} blocks live) — "
+                "preempt a victim to free capacity")
         self._reserved -= 1
         blk = self._free.pop()
         self._refs[blk] = 1

@@ -33,10 +33,30 @@ scheduler itself is a pure protocol consumer: admission is gated by
 ``state.can_admit``, eviction goes through ``state.evict``, and the
 KV-occupancy metrics read ``state.occupancy``.
 
+**Over-commit + priority preemption** (``SchedulerConfig.overcommit``,
+paged only). The worst-case block reservation wastes capacity on requests
+that finish early, so admission may optimistically reserve up to
+``overcommit x pool capacity``. When the bet loses — the pool's free list
+is actually empty as a decode crosses a block boundary — the scheduler
+preempts the lowest-priority (ties: youngest, i.e. largest rid) victim:
+its blocks are freed through the refcount-aware ``evict``, and the
+request is requeued at the *front* of its priority class with its
+already-generated tokens appended to the prompt as a **re-prefill**
+(recompute, not swap — prefill is cheap at these sizes, and with
+``prefix_cache`` the original prompt's resident blocks make the re-prefill
+nearly free). Greedy outputs are bit-equal to a never-preempted run —
+the open-loop SLO benchmark asserts it. Requests carry a ``priority``
+class (``submit(..., priority=)``, higher = more important): admission
+drains classes strictly highest-first and victims are chosen
+lowest-first, so high-priority tail latency is protected while
+low-priority work absorbs the over-commit risk.
+
 Everything device-side is jitted once per shape: one prefill per bucket
 length, one decode step, one row insert. ``trace_counts`` tracks actual
 retraces (a python-level counter bumped only when jit re-traces), which is
 what the no-recompilation-after-warmup test asserts — for every family.
+Preempt/requeue cycles reuse the same bucketed prefills, so they stay
+retrace-free too.
 
 Sharding: with ``mesh`` given, params and the decode state are placed via
 ``repro.dist`` rules (``tree_shardings`` over the models' logical axes) and
@@ -60,6 +80,7 @@ from ..dist.sharding import tree_shardings
 from ..models.registry import ModelApi
 from .cache import make_decode_state
 from .metrics import ServeMetrics
+from .paged import PoolExhausted
 
 
 @dataclass(frozen=True)
@@ -68,6 +89,10 @@ class Request:
     tokens: np.ndarray           # (prompt_len,) int32, no padding
     max_new_tokens: int
     extra: dict | None = None    # per-request prefill extras (frames/...)
+    priority: int = 0            # higher = admitted first, preempted last
+    resumed: bool = False        # requeued after preemption: ``tokens``
+    #                              already carries the generated prefix and
+    #                              ``max_new_tokens`` is the remaining budget
 
 
 @dataclass
@@ -86,6 +111,14 @@ class SchedulerConfig:
     # session-prefix caching (requires paged): refcounted sharing of
     # resident prompt blocks + tail-only prefill (see serve/paged.py)
     prefix_cache: bool = False
+    # optimistic admission (requires paged): reserve up to this factor of
+    # the pool's real capacity; actual exhaustion mid-decode preempts the
+    # lowest-priority (ties: youngest) request, which is requeued with
+    # its generated tokens as a re-prefill. 1.0 = honest reservation,
+    # preemption impossible.
+    overcommit: float = 1.0
+    # run BlockPool.check_invariants after every evict/preempt (tests)
+    debug: bool = False
 
 
 class ContinuousScheduler:
@@ -158,12 +191,18 @@ class ContinuousScheduler:
         self._cur_tok = np.zeros(B, np.int32)
         self._emitted = np.zeros(B, np.int32)
         self._budget = np.zeros(B, np.int32)
+        self._slot_prio = np.zeros(B, np.int64)
+        self._slot_req: list[Request | None] = [None] * B
 
-        self._pending: collections.deque[Request] = collections.deque()
+        # one FIFO per priority class; admission drains the highest class
+        # first, a preempted request re-enters at the FRONT of its class
+        # (it is the class's most senior in-flight work)
+        self._pending: dict[int, collections.deque[Request]] = {}
         self._next_rid = 0
         self._step_counter = 0
         self._key = jax.random.PRNGKey(cfg.seed)
         self.outputs: dict[int, list[int]] = {}
+        self.preemptions = 0
         self.state.init(B, cfg.max_new_tokens)
 
     # -- plumbing ----------------------------------------------------------
@@ -227,10 +266,12 @@ class ContinuousScheduler:
     # -- public API --------------------------------------------------------
 
     def submit(self, tokens, max_new_tokens: int | None = None,
-               extra: dict | None = None) -> int:
+               extra: dict | None = None, priority: int = 0) -> int:
         """Queue one request; returns its rid. ``tokens``: (prompt_len,).
         ``extra`` carries the family's per-request prefill inputs (encdec
-        frames, vlm patches) — validated against the registry caps."""
+        frames, vlm patches) — validated against the registry caps.
+        ``priority`` is the request's class (higher = admitted first,
+        preempted last; classes drain strictly highest-first)."""
         toks = np.asarray(tokens, np.int32).reshape(-1)
         if len(toks) == 0:
             toks = np.array([PAD_ID], np.int32)
@@ -247,15 +288,42 @@ class ContinuousScheduler:
                 f"prompt length {len(toks)} (bucket {bucket}) + budget "
                 f"{budget} needs {len(toks) + budget - 1} cache positions "
                 f"and overflows max_cache_len={cap}")
+        if self.cfg.overcommit > 1.0 \
+                and len(toks) + budget - 1 > max(self.cfg.buckets):
+            # a preempted request re-prefills prompt + generated tokens;
+            # its worst-case requeue prompt (one shy of prompt + budget)
+            # must still fit a compiled bucket
+            raise ValueError(
+                f"over-commit serving needs prompt ({len(toks)}) + budget "
+                f"({budget}) - 1 <= the largest bucket "
+                f"({max(self.cfg.buckets)}) so a preempted request can "
+                "always re-prefill its generated tokens")
         self.state.validate_request(len(toks), bucket, budget)
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, tokens=toks, max_new_tokens=budget,
-                      extra=self._normalize_extra(extra))
-        self._pending.append(req)
+                      extra=self._normalize_extra(extra),
+                      priority=int(priority))
+        self._push_pending(req)
         if self.metrics is not None:
-            self.metrics.record_submit(rid, prompt_len=len(toks))
+            self.metrics.record_submit(rid, prompt_len=len(toks),
+                                       priority=req.priority)
         return rid
+
+    # -- priority queues ---------------------------------------------------
+
+    def _push_pending(self, req: Request, front: bool = False) -> None:
+        dq = self._pending.setdefault(req.priority, collections.deque())
+        dq.appendleft(req) if front else dq.append(req)
+
+    def _head_queue(self) -> collections.deque[Request] | None:
+        """The nonempty queue of the highest priority class, or None.
+        Admission never skips past a blocked head to a lower class — that
+        would hand the blocked request's blocks to work it outranks."""
+        for prio in sorted(self._pending, reverse=True):
+            if self._pending[prio]:
+                return self._pending[prio]
+        return None
 
     def _normalize_extra(self, extra: dict | None) -> dict | None:
         spec = self.api.caps.extras
@@ -286,7 +354,7 @@ class ContinuousScheduler:
 
     @property
     def num_pending(self) -> int:
-        return len(self._pending)
+        return sum(len(dq) for dq in self._pending.values())
 
     def _bucket_for(self, n: int) -> int:
         for b in sorted(self.cfg.buckets):
@@ -303,12 +371,16 @@ class ContinuousScheduler:
 
         Beyond a free row, the head request must pass the state's resource
         gate (``can_admit`` — paged mode reserves its worst case in
-        blocks), else admission stalls (FIFO) until an eviction frees
-        resources."""
+        blocks, scaled by ``overcommit``), else admission stalls (FIFO
+        within a class, classes strictly highest-first) until an eviction
+        frees resources."""
         free = np.flatnonzero(~self._active)
         fi = 0
-        while self._pending and fi < len(free):
-            req = self._pending[0]                  # peek: may not fit yet
+        while fi < len(free):
+            dq = self._head_queue()
+            if dq is None:
+                break
+            req = dq[0]                             # peek: may not fit yet
             n = len(req.tokens)
             # prefix planning is pure (no pool side effects): the plan only
             # shrinks the reservation can_admit gates on, and admit()
@@ -316,7 +388,7 @@ class ContinuousScheduler:
             plan = self.state.prefix_plan(req.tokens, req.max_new_tokens)
             if not self.state.can_admit(n, req.max_new_tokens, plan=plan):
                 break                               # wait for an eviction
-            self._pending.popleft()
+            dq.popleft()
             slot = int(free[fi])
             # prefix hit: prefill only the divergent tail, bucketed by its
             # own (shorter) length; the cache still covers start + bucket
@@ -345,7 +417,12 @@ class ContinuousScheduler:
                 tok0, row_state, idx = prefill(self.params, batch, key)
             self.prefills += 1
             t0 = int(np.asarray(tok0)[0])
-            self.outputs[req.rid] = [t0]
+            if req.resumed:
+                # requeued after preemption: the prompt already replayed
+                # the generated prefix, t0 continues the same output list
+                self.outputs[req.rid].append(t0)
+            else:
+                self.outputs[req.rid] = [t0]
             if self.metrics is not None:
                 self.metrics.record_token(req.rid)
             if t0 == EOS_ID or req.max_new_tokens <= 1:
@@ -356,11 +433,57 @@ class ContinuousScheduler:
                 self.state.prefill_insert(row_state, slot, n, bucket)
             self._active[slot] = True
             self._slot_rid[slot] = req.rid
+            self._slot_prio[slot] = req.priority
+            self._slot_req[slot] = req
             self._pos[slot] = n
             self._cur_tok[slot] = t0
             self._emitted[slot] = 1
             self._budget[slot] = req.max_new_tokens
             fi += 1
+
+    def _preempt_one(self) -> None:
+        """Evict the lowest-priority (ties: youngest, i.e. largest rid)
+        active request and requeue it at the front of its class with its
+        generated tokens appended to the prompt — the re-prefill replays
+        them so greedy outputs stay bit-equal to a never-preempted run.
+
+        Preempting the only active request would livelock (its own growth
+        exhausted the pool it is about to re-prefill into), and honest
+        per-request validation makes that unreachable — so it is a loud
+        bug, not a recoverable state."""
+        active = np.flatnonzero(self._active)
+        if len(active) <= 1:
+            raise RuntimeError(
+                "BlockPool exhausted with "
+                f"{len(active)} active request(s): preempting the only "
+                "request cannot free enough blocks for its own re-prefill. "
+                "Per-request validation should make this unreachable — "
+                f"overcommit={self.cfg.overcommit} is too aggressive for "
+                "this pool/budget combination.")
+        victim = int(max(
+            active,
+            key=lambda s: (-self._slot_prio[s], self._slot_rid[s])))
+        rid = int(self._slot_rid[victim])
+        req = self._slot_req[victim]
+        k = int(self._emitted[victim])
+        gen = np.asarray(self.outputs[rid][-k:], np.int32)
+        # prompt ++ generated re-prefills to the exact point of preemption:
+        # len grows by k, budget shrinks by k, so len + budget - 1 is
+        # invariant across requeues and always fits the largest bucket
+        # (enforced at submit when overcommit > 1)
+        requeued = Request(
+            rid=rid,
+            tokens=np.concatenate([req.tokens, gen]),
+            max_new_tokens=int(self._budget[victim]) - k,
+            extra=req.extra, priority=req.priority, resumed=True)
+        self._active[victim] = False
+        self._slot_rid[victim] = -1
+        self._slot_req[victim] = None
+        self.state.evict(victim)               # refcount-aware block release
+        self._push_pending(requeued, front=True)
+        self.preemptions += 1
+        if self.metrics is not None:
+            self.metrics.record_preempt(rid)
 
     def step(self) -> dict[int, int]:
         """One decode step over the whole slot table; returns this step's
@@ -368,7 +491,16 @@ class ContinuousScheduler:
         self._admit()
         if not self._active.any():
             return {}
-        view = self.state.decode_view(self._pos, self._active)
+        # lazy table growth may find the free list actually empty under
+        # over-commit — preempt until the survivors' growth fits. The growth
+        # loop is idempotent for already-grown rows and take() raises before
+        # touching pool state, so retrying after an eviction is safe.
+        while True:
+            try:
+                view = self.state.decode_view(self._pos, self._active)
+                break
+            except PoolExhausted:
+                self._preempt_one()
         key = jax.random.fold_in(self._key, 2 * self._step_counter)
         self._step_counter += 1
         with self._ctx():
@@ -399,6 +531,7 @@ class ContinuousScheduler:
                 self._finish(rid)
                 self._active[slot] = False     # evict; backfilled next admit
                 self._slot_rid[slot] = -1
+                self._slot_req[slot] = None
                 self.state.evict(slot)
         self._cur_tok = nxt.astype(np.int32)
         self._admit()
@@ -410,7 +543,7 @@ class ContinuousScheduler:
         drained since the last ``run`` and releases them — the open-ended
         stream never accumulates history device- or host-side."""
         self._admit()
-        while self._active.any() or self._pending:
+        while self._active.any() or self.num_pending:
             self.step()
         done = {rid: np.asarray(toks, np.int32)
                 for rid, toks in self.outputs.items()}

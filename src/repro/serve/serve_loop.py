@@ -48,6 +48,12 @@ class ServeConfig:
     # session-prefix caching (requires paged): refcounted block sharing +
     # tail-only prefill for prompts with resident prefixes
     prefix_cache: bool = False
+    # optimistic admission (requires paged): reserve up to this factor of
+    # pool capacity; exhaustion mid-decode preempts the lowest-priority
+    # victim (see serve/scheduler.py). 1.0 = honest reservation.
+    overcommit: float = 1.0
+    # run BlockPool.check_invariants after every evict/preempt
+    debug: bool = False
 
 
 def prompt_lengths(prompts: np.ndarray) -> np.ndarray:
@@ -108,7 +114,9 @@ class Server:
                                 paged=self.scfg.paged,
                                 block_size=self.scfg.block_size,
                                 num_blocks=self.scfg.num_blocks,
-                                prefix_cache=self.scfg.prefix_cache),
+                                prefix_cache=self.scfg.prefix_cache,
+                                overcommit=self.scfg.overcommit,
+                                debug=self.scfg.debug),
                 mesh=self.mesh)
         return self._schedulers[key]
 

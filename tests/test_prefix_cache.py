@@ -27,12 +27,14 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs import smoke_config
 from repro.models.registry import get_model
-from repro.serve import (ContinuousScheduler, SchedulerConfig, ServeMetrics,
+from repro.serve import (ContinuousScheduler, ServeMetrics,
                          BlockPool, PrefixPlan, chain_hash, prefix_hashes)
 from repro.serve.cache import make_decode_state
 from repro.serve.paged import PREFIX_SEED
 
-from test_serve import _stub_api, _stub_expected, VOCAB
+# debug-defaulting SchedulerConfig wrapper: invariants checked after
+# every evict/preempt in all scheduler tests
+from test_serve import _stub_api, _stub_expected, VOCAB, SchedulerConfig
 
 
 def _pool(num_blocks=8, block_size=4):

@@ -25,10 +25,19 @@ from repro.models.registry import get_model, ModelApi, ServeCaps
 from repro.data.pipeline import PAD_ID, EOS_ID
 from repro.dist import make_host_mesh, REPLICATED
 from repro.serve import (Server, ServeConfig, ContinuousScheduler,
-                         SchedulerConfig, ServeMetrics, prompt_lengths,
+                         ServeMetrics, prompt_lengths,
                          BlockPool, blocks_for)
+from repro.serve import SchedulerConfig as _SchedulerConfig
 
 VOCAB = 64
+
+
+def SchedulerConfig(**kw):
+    """Every scheduler test runs with ``debug=True``: the pool re-checks
+    its allocator invariants after each evict/preempt, so a refcount or
+    free-list corruption fails the test that caused it, not a later one."""
+    kw.setdefault("debug", True)
+    return _SchedulerConfig(**kw)
 
 # one representative smoke arch per family (+ the paper LM): the 7-arch
 # serving matrix every DecodeState implementation is exercised through
