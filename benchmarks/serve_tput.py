@@ -14,9 +14,14 @@ all queued at t=0) served two ways over the same smoke behaviour LM:
 Then the paged-KV comparison at **equal slab bytes**: a short-dominated
 stream served by the dense slot table (every row pins a ``max_cache_len``
 stripe) vs the paged scheduler (the same bytes as fixed blocks shared by
-many more rows). ``serve_dense`` / ``serve_paged`` rows report tokens/sec,
-slab bytes, and the number of concurrently admitted requests; the paged
-row must admit >= 2x the dense row (asserted).
+many more rows). The paged ``(block_size, num_blocks)`` carving is not
+hardcoded: an **autotune sweep** replays the stream through every
+equal-slab candidate carving, scores admitted peak (then decode steps,
+then smaller blocks), and the winner — recorded with the full candidate
+table under ``BENCH_serve.json["autotune"]`` — is what ``serve_paged``
+and ``serve_fleet`` run with. ``serve_dense`` / ``serve_paged`` rows
+report tokens/sec, slab bytes, and the number of concurrently admitted
+requests; the paged row must admit >= 2x the dense row (asserted).
 
 ``serve_prefix`` then replays a session-shaped stream (80% common prefix)
 through the same pool with ``prefix_cache`` off vs on: sharing must admit
@@ -41,9 +46,21 @@ row gates on over-commit admission gain >= 1.3x at equal slab bytes,
 high-priority p99 latency no worse than the reservation baseline, at
 least one actual preemption (the recovery path really ran), outputs
 bit-equal to the never-preempted baseline, and zero retraces after
-warmup. With ``run.py --json`` everything lands machine-readably in
+warmup.
+
+``serve_fleet`` scales the same open-loop harness out horizontally: a
+``ReplicaRouter`` over 4 independent replicas (each the autotuned
+serve_paged slab — equal per-replica bytes vs the single-replica
+oracle) absorbs a burst stream that saturates one replica. Gates:
+fleet admitted peak >= 3x the single replica, fleet p99 no worse,
+outputs bit-equal to the oracle, zero retraces; then an 80%-common-
+prefix session stream replayed under JSQ vs prefix-affinity routing
+must show affinity beating JSQ's prefix hit rate (the point of
+affinity: N-way routing must not dilute PR 6's session cache). With
+``run.py --json`` everything lands machine-readably in
 ``BENCH_serve.json`` (family rows under ``families``, the SLO row under
-``slo``).
+``slo``, the fleet row under ``fleet``, the carving sweep under
+``autotune``).
 
 Rows report tokens/sec plus the p50/p99 per-request latency derived from
 the arrival model (t=0 queue for the closed-loop rows, seeded bursts for
@@ -141,10 +158,13 @@ def run() -> list[str]:
     ]
 
     # -- paged vs dense at equal slab bytes --------------------------------
-    # Dense: 4 slots x 64-position stripes. Paged: the same device bytes as
-    # 31 allocatable blocks of 8 tokens (+ the trash block) shared by a
-    # 16-row slot table. The stream is short-dominated (prompt 4..8,
-    # budget 6 -> 2 blocks/request), the shape the dense stripe wastes.
+    # Dense: 4 slots x 64-position stripes. Paged: the same device bytes
+    # carved into fixed blocks shared by a 16-row slot table — the
+    # (block_size, num_blocks) carving itself comes from the autotune
+    # sweep below, not a hardcoded 8/31. The stream is short-dominated
+    # (prompt 4..8, budget 6), the shape the dense stripe wastes.
+    # serve_prefix/serve_slo keep the fixed 8/31 carving: their gates pin
+    # prefix/preemption *machinery* at a known shape, not the carving.
     block_size = 8
     dense_slots = batch
     max_blocks = cfg.max_cache_len // block_size
@@ -166,6 +186,45 @@ def run() -> list[str]:
         outs = sched.run()
         return peak, [outs[r] for r in rids]
 
+    # -- autotune: sweep the (block_size, num_blocks) carving --------------
+    # Down-payment on the roadmap's paged-attention autotune: every
+    # candidate carves the SAME slab bytes (dense_slots x max_cache_len
+    # positions) into a different block size, replays the serve_paged
+    # stream, and is scored on deterministic stream metrics — admitted
+    # peak first (the capacity the slab converts into), then fewer decode
+    # steps to drain, then smaller blocks (less tail padding per request).
+    # The winner is what serve_paged and serve_fleet actually run with,
+    # and the whole table lands in BENCH_serve.json["autotune"].
+    def autotune_block_config(block_sizes=(4, 8, 16)):
+        cands = []
+        for bs in block_sizes:
+            if cfg.max_cache_len % bs:
+                continue
+            nb = dense_slots * (cfg.max_cache_len // bs) - 1
+            sched = ContinuousScheduler(api, params, SchedulerConfig(
+                batch=paged_slots, buckets=(bucket,), max_new_tokens=budget,
+                paged=True, block_size=bs, num_blocks=nb))
+            peak, _ = drain(sched)
+            cands.append(dict(
+                block_size=bs, num_blocks=nb,
+                slab_bytes=int(sched.pool.slab_bytes),
+                admitted_peak=int(peak),
+                decode_steps=int(sched.decode_steps)))
+        assert len({c["slab_bytes"] for c in cands}) == 1, \
+            "autotune candidates must carve equal slab bytes"
+        best = max(cands, key=lambda c: (c["admitted_peak"],
+                                         -c["decode_steps"],
+                                         -c["block_size"]))
+        return dict(model="behavior-lm-100m-smoke",
+                    stream=dict(requests=n_short, prompt_len="4..8",
+                                budget=budget, slots=paged_slots),
+                    candidates=cands,
+                    block_size=best["block_size"],
+                    num_blocks=best["num_blocks"])
+
+    autotune = autotune_block_config()
+    at_bs, at_nb = autotune["block_size"], autotune["num_blocks"]
+
     dense_sched = ContinuousScheduler(api, params, SchedulerConfig(
         batch=dense_slots, buckets=(bucket,), max_new_tokens=budget))
     drain(dense_sched)                              # warmup
@@ -175,7 +234,7 @@ def run() -> list[str]:
 
     paged_sched = ContinuousScheduler(api, params, SchedulerConfig(
         batch=paged_slots, buckets=(bucket,), max_new_tokens=budget,
-        paged=True, block_size=block_size, num_blocks=pool_blocks))
+        paged=True, block_size=at_bs, num_blocks=at_nb))
     drain(paged_sched)                              # warmup
     warm_paged = dict(paged_sched.trace_counts)
     paged_metrics = ServeMetrics()
@@ -187,7 +246,7 @@ def run() -> list[str]:
     for a, b in zip(dense_outs, paged_outs):        # same stream, same toks
         np.testing.assert_array_equal(a, b)
 
-    kv_bytes = paged_sched.pool.block_bytes // block_size   # per position
+    kv_bytes = paged_sched.pool.block_bytes // at_bs        # per position
     dense_bytes = dense_slots * cfg.max_cache_len * kv_bytes
     paged_bytes = paged_sched.pool.slab_bytes
     assert paged_bytes == dense_bytes, (paged_bytes, dense_bytes)
@@ -204,7 +263,7 @@ def run() -> list[str]:
         row("serve_paged", (ps['tokens'] / ps['tokens_per_sec']) * 1e6
             if ps['tokens_per_sec'] else 0.0,
             f"{ps['tokens_per_sec']:.1f} tok/s slab={paged_bytes}B "
-            f"admitted={paged_peak} blocks={pool_blocks}x{block_size} "
+            f"admitted={paged_peak} blocks={at_nb}x{at_bs} "
             f"util={ps['kv_util_peak']:.0%} 0 retraces"),
     ]
 
@@ -338,18 +397,20 @@ def run() -> list[str]:
         prio = 1 if srng.random() < 0.25 else 0
         slo_stream.append((float(t), p.astype(np.int32), int(b), prio))
 
-    def open_loop(sched, clock):
+    def open_loop(sched, clock, stream):
         """Open-loop drive: requests appear at their seeded arrival times
         (submit stamped at the true arrival), the clock advances one unit
-        per scheduler step, idle gaps fast-forward. Returns (peak
+        per scheduler step, idle gaps fast-forward. Works identically for
+        a single ``ContinuousScheduler`` and a ``ReplicaRouter`` — both
+        speak submit/step/run and num_active/num_pending. Returns (peak
         concurrently admitted, {rid: outputs})."""
         i, peak = 0, 0
-        while i < len(slo_stream) or sched.num_active or sched.num_pending:
+        while i < len(stream) or sched.num_active or sched.num_pending:
             if not (sched.num_active or sched.num_pending):
-                clock.now = max(clock.now, slo_stream[i][0])
+                clock.now = max(clock.now, stream[i][0])
             now = clock.now
-            while i < len(slo_stream) and slo_stream[i][0] <= now:
-                t, p, b, prio = slo_stream[i]
+            while i < len(stream) and stream[i][0] <= now:
+                t, p, b, prio = stream[i]
                 clock.now = t
                 sched.submit(p, max_new_tokens=b, priority=prio)
                 i += 1
@@ -365,11 +426,11 @@ def run() -> list[str]:
             batch=slo_slots, buckets=(8, 16, 32), max_new_tokens=20,
             paged=True, block_size=block_size, num_blocks=pool_blocks,
             overcommit=factor, debug=True))
-        open_loop(sched, clock)                      # warmup (jit traces)
+        open_loop(sched, clock, slo_stream)          # warmup (jit traces)
         warm = dict(sched.trace_counts)
         clock.now = 0.0
         sched.metrics = ServeMetrics(clock=clock)
-        peak, outs = open_loop(sched, clock)
+        peak, outs = open_loop(sched, clock, slo_stream)
         assert dict(sched.trace_counts) == warm, \
             f"slo scheduler (overcommit={factor}) recompiled after warmup"
         sched.pool.check_invariants()
@@ -429,8 +490,151 @@ def run() -> list[str]:
         bit_equal=bool(slo_bit_equal),
     )
 
+    # -- replica fleet: JSQ scaling + prefix-affinity routing --------------
+    # One router over 4 independent replicas, each carved exactly like the
+    # autotuned serve_paged slab — equal per-replica bytes vs the single-
+    # replica oracle, so the scaling claim is about routing, not capacity.
+    from repro.serve import ReplicaRouter, FleetConfig
+
+    fleet_n, fleet_slots = 4, 16
+    fleet_cfg = SchedulerConfig(
+        batch=fleet_slots, buckets=(8, 32), max_new_tokens=budget,
+        paged=True, block_size=at_bs, num_blocks=at_nb,
+        prefix_cache=True, debug=True)
+
+    # scaling stream: dense bursts of short prompts — arrivals outrun one
+    # replica's admission capacity so the backlog is deep enough to fill
+    # four replicas' worth of slots
+    n_fleet = 96
+    flrng = np.random.default_rng(23)
+    scale_stream = [
+        (float(t),
+         flrng.integers(4, 64, int(flrng.integers(4, 9))).astype(np.int32),
+         budget, 0)
+        for t in bursty_arrivals(n_fleet, mean_gap=1.0, burst_mean=16.0,
+                                 seed=23)]
+
+    # session stream: 8 sessions x 24-token prefix + 6-token tails (80%
+    # common), bursts close enough together that a session's blocks are
+    # still refcount-resident when its next request lands
+    n_aff = 40
+    arng = np.random.default_rng(29)
+    sess_prefix = [arng.integers(4, 64, 24).astype(np.int32)
+                   for _ in range(8)]
+    aff_stream = []
+    for t in bursty_arrivals(n_aff, mean_gap=4.0, burst_mean=8.0, seed=29):
+        s = int(arng.integers(0, len(sess_prefix)))
+        tail = arng.integers(4, 64, 6).astype(np.int32)
+        aff_stream.append(
+            (float(t), np.concatenate([sess_prefix[s], tail]), budget, 0))
+
+    def fleet_measure(target, stream):
+        """Warmup pass (jit traces; metrics discarded) then a measured
+        replay of the same open-loop stream on a fresh virtual clock.
+        Returns (peak admitted, outputs in submit order, summary)."""
+        open_loop(target, VirtualClock(), stream)            # warmup
+        clock = VirtualClock()
+        if isinstance(target, ReplicaRouter):
+            warm = [dict(r.trace_counts) for r in target.replicas]
+            target.reset_metrics(clock)
+            peak, outs = open_loop(target, clock, stream)
+            assert [dict(r.trace_counts) for r in target.replicas] == warm, \
+                "fleet replica recompiled after warmup"
+            summ = target.summary()
+            for r in target.replicas:
+                r.pool.check_invariants()
+        else:
+            warm = dict(target.trace_counts)
+            target.metrics = ServeMetrics(clock=clock)
+            peak, outs = open_loop(target, clock, stream)
+            assert dict(target.trace_counts) == warm, \
+                "single-replica oracle recompiled after warmup"
+            summ = target.metrics.summary()
+            target.pool.check_invariants()
+        # rids are assigned monotonically in submit order on both the
+        # single scheduler and the router's global namespace
+        return peak, [outs[k] for k in sorted(outs)], summ
+
+    single = ContinuousScheduler(api, params, fleet_cfg)
+    jsq_fleet = ReplicaRouter(api, params, fleet_cfg,
+                              FleetConfig(replicas=fleet_n, route="jsq"))
+    aff_fleet = ReplicaRouter(
+        api, params, fleet_cfg,
+        FleetConfig(replicas=fleet_n, route="affinity"))
+    assert jsq_fleet.replicas[0].pool.slab_bytes == single.pool.slab_bytes
+
+    s_peak, s_outs, s_sum = fleet_measure(single, scale_stream)
+    f_peak, f_outs, f_sum = fleet_measure(jsq_fleet, scale_stream)
+    fleet_scaling = f_peak / max(s_peak, 1)
+    fleet_bit_equal = (len(s_outs) == len(f_outs) and all(
+        np.array_equal(a, b) for a, b in zip(s_outs, f_outs)))
+    assert fleet_bit_equal, \
+        "fleet outputs diverge from the single-replica oracle"
+    assert fleet_scaling >= 3.0, \
+        f"fleet admitted {f_peak} < 3x single-replica {s_peak}"
+    assert f_sum["p99_latency_s"] <= s_sum["p99_latency_s"], \
+        (f"fleet p99 {f_sum['p99_latency_s']} worse than single-replica "
+         f"{s_sum['p99_latency_s']}")
+
+    # affinity vs JSQ on the session stream (single run = output oracle)
+    _, so_outs, _ = fleet_measure(single, aff_stream)
+    jq_peak, jq_outs, jq_sum = fleet_measure(jsq_fleet, aff_stream)
+    af_peak, af_outs, af_sum = fleet_measure(aff_fleet, aff_stream)
+    aff_bit_equal = all(
+        np.array_equal(a, b) for a, b in zip(so_outs, jq_outs)) and all(
+        np.array_equal(a, b) for a, b in zip(so_outs, af_outs))
+    assert aff_bit_equal, "routing policy changed decoded outputs"
+    assert af_sum["prefix_hit_rate"] > jq_sum["prefix_hit_rate"], \
+        (f"affinity hit rate {af_sum['prefix_hit_rate']:.2f} <= JSQ "
+         f"{jq_sum['prefix_hit_rate']:.2f}")
+
+    rows.append(row(
+        "serve_fleet", f_sum["p99_latency_s"],
+        f"replicas={fleet_n} admitted={f_peak} vs {s_peak} single "
+        f"(x{fleet_scaling:.1f}) "
+        f"p99={f_sum['p99_latency_s']:.0f} vs "
+        f"{s_sum['p99_latency_s']:.0f} steps "
+        f"imb={f_sum['fleet']['load_imbalance']:.2f} "
+        f"aff-hit={af_sum['prefix_hit_rate']:.0%} vs "
+        f"jsq={jq_sum['prefix_hit_rate']:.0%} "
+        f"bit_equal={bool(fleet_bit_equal and aff_bit_equal)} 0 retraces"))
+
+    fleet_json = dict(
+        replicas=fleet_n, slots_per_replica=fleet_slots,
+        block_size=at_bs, num_blocks=at_nb,
+        slab_bytes_per_replica=int(single.pool.slab_bytes),
+        scale_stream=dict(requests=n_fleet, mean_gap=1.0, burst_mean=16.0,
+                          seed=23, prompt_len="4..8", budget=budget),
+        single=dict(admitted_peak=int(s_peak),
+                    p99_latency_steps=s_sum["p99_latency_s"],
+                    p50_latency_steps=s_sum["p50_latency_s"],
+                    tokens_per_sec=s_sum["tokens_per_sec"]),
+        jsq=dict(admitted_peak=int(f_peak),
+                 p99_latency_steps=f_sum["p99_latency_s"],
+                 p50_latency_steps=f_sum["p50_latency_s"],
+                 tokens_per_sec=f_sum["tokens_per_sec"],
+                 load_imbalance=f_sum["fleet"]["load_imbalance"],
+                 routed_per_replica=f_sum["fleet"]["routed_per_replica"],
+                 gossip_ticks=f_sum["fleet"]["gossip_ticks"]),
+        scaling=float(fleet_scaling),
+        bit_equal=bool(fleet_bit_equal and aff_bit_equal),
+        affinity_stream=dict(requests=n_aff, sessions=len(sess_prefix),
+                             prefix_len=24, tail_len=6, mean_gap=4.0,
+                             burst_mean=8.0, seed=29),
+        jsq_prefix_hit_rate=jq_sum["prefix_hit_rate"],
+        affinity_hit_rate=af_sum["prefix_hit_rate"],
+        affinity=dict(
+            admitted_peak=int(af_peak),
+            load_imbalance=af_sum["fleet"]["load_imbalance"],
+            routed_per_replica=af_sum["fleet"]["routed_per_replica"],
+            prefix_blocks_reused=int(af_sum["prefix_blocks_reused"]),
+            prefill_tokens_skipped=int(af_sum["prefill_tokens_skipped"])),
+    )
+
     global LAST_JSON
     LAST_JSON = dict(
+        autotune=autotune,
+        fleet=fleet_json,
         slo=slo_json,
         families=families_json,
         stream=dict(requests=n_short, prompt_len="4..8", budget=budget,
@@ -444,7 +648,7 @@ def run() -> list[str]:
                    kv_util_peak=ds["kv_util_peak"],
                    kv_peak_resident_bytes=ds["kv_peak_resident_bytes"]),
         paged=dict(slab_bytes=int(paged_bytes), slots=paged_slots,
-                   num_blocks=pool_blocks, block_size=block_size,
+                   num_blocks=at_nb, block_size=at_bs,
                    admitted_peak=int(paged_peak),
                    tokens_per_sec=ps["tokens_per_sec"],
                    p50_latency_s=ps["p50_latency_s"],

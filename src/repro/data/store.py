@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import json
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
@@ -93,7 +93,14 @@ def _code_counts(codes: np.ndarray) -> dict[int, int]:
 
 @dataclass(frozen=True)
 class Segment:
-    """One immutable columnar segment + the metadata ``scan`` prunes on."""
+    """One immutable columnar segment + the metadata ``scan`` prunes on.
+
+    An **evicted** segment (``on_disk=True``, via ``Store.evict_to_disk``)
+    keeps every metadata field resident — pruning never touches disk — but
+    its ``blob`` is empty; ``disk_bytes`` remembers the spilled blob size
+    so byte accounting is unchanged. Decoding an evicted segment without
+    reloading it first is a loud error, not a silent empty result.
+    """
     seg_id: int
     kind: str                 # "events" | "sessions"
     n: int                    # rows (events, or sessions)
@@ -104,10 +111,12 @@ class Segment:
     code_counts: dict[int, int] = field(repr=False)  # stored symbols only
     col_bytes: dict[str, int] = field(repr=False)
     blob: bytes = field(repr=False)
+    on_disk: bool = False     # blob aged out to the spill dir
+    disk_bytes: int = 0       # spilled blob size (0 while resident)
 
     @property
     def nbytes(self) -> int:
-        return len(self.blob)
+        return self.disk_bytes if self.on_disk else len(self.blob)
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +159,10 @@ def encode_event_segment(seg_id: int, user_id, session_id, timestamp, code,
 def decode_event_segment(seg: Segment) -> dict[str, np.ndarray]:
     """Segment -> event columns (time-sorted, as encoded)."""
     assert seg.kind == "events"
+    if seg.on_disk:
+        raise ValueError(
+            f"segment {seg.seg_id} is evicted to disk — reload its blob "
+            "before decoding (Store.scan does this transparently)")
     n, off = seg.n, 0
     dt, off = varint.decode_ivarint(seg.blob, n, off)
     u, off = varint.decode_ivarint(seg.blob, n, off)
@@ -206,6 +219,10 @@ def decode_session_segment(seg: Segment, min_width: int = 0
     """Segment -> SessionSequences (row order as encoded; symbol matrix at
     least ``min_width`` wide so callers can concat across segments)."""
     assert seg.kind == "sessions"
+    if seg.on_disk:
+        raise ValueError(
+            f"segment {seg.seg_id} is evicted to disk — reload its blob "
+            "before decoding (Store.scan does this transparently)")
     n, off = seg.n, 0
     dstart, off = varint.decode_ivarint(seg.blob, n, off)
     u, off = varint.decode_ivarint(seg.blob, n, off)
@@ -300,6 +317,12 @@ class ScanStats:
     rows_decoded: int
     rows_matched: int
     unmaterialized_events: int  # matching events still in event segments
+    # RAM-headroom accounting (Store.evict_to_disk): evicted segments this
+    # scan *considered* (metadata pruning is free either way) vs. evicted
+    # segments it actually had to re-read from disk to decode — the gap is
+    # I/O the metadata pruning saved
+    segments_on_disk: int = 0
+    segments_reloaded: int = 0
 
     @property
     def segments_pruned(self) -> int:
@@ -330,6 +353,11 @@ class Store:
         self.late_appended = 0
         self.compaction_watermark = -(1 << 62)
         self.truncated = False
+        # RAM-headroom cap (evict_to_disk): None = everything resident
+        self.max_resident_segments: int | None = None
+        self._spill_dir: str | None = None
+        self.segments_evicted = 0     # cumulative blobs aged to disk
+        self.segments_reloaded = 0    # cumulative transient re-reads
 
     def __len__(self) -> int:
         return len(self.segments)
@@ -359,6 +387,7 @@ class Store:
                                      user_shards=self.cfg.user_shards)
         self.segments.append(seg)
         self.events_appended += seg.n_events
+        self._enforce_residency()
         return seg
 
     # -- compaction --------------------------------------------------------
@@ -426,11 +455,82 @@ class Store:
             new_segments.append(seg)
             bytes_out += seg.nbytes
         self.segments = new_segments
+        self._enforce_residency()
         return CompactionStats(
             watermark=wm, segments_in=len(cand), events_in=len(u),
             sessions_out=sessions_out, events_closed=n_closed,
             residual_events=n_open,
             bytes_in=sum(g.nbytes for g in cand), bytes_out=bytes_out)
+
+    # -- RAM headroom: age cold segments to disk ---------------------------
+
+    def evict_to_disk(self, max_resident_segments: int,
+                      path: str | None = None) -> int:
+        """Age oldest compacted (session) segments to disk until at most
+        ``max_resident_segments`` of them keep their blob in RAM.
+
+        The cap is sticky: future compactions and ``append_sessions``
+        keep honoring it, so a long-running store's resident bytes stay
+        bounded while its history grows. Only session segments age out —
+        event segments are young by construction (compaction folds them
+        away) and the next compaction would decode them anyway. Eviction
+        writes the blob to ``path`` (the spill dir; required on the first
+        call, remembered after) in the exact ``save``-format
+        ``seg_<id>.bin`` blob, then drops it from the in-memory segment.
+        All pruning metadata stays resident, so ``scan`` still prunes for
+        free and only **re-reads the blobs it actually decodes** —
+        transiently, the segment stays evicted (counted in
+        ``ScanStats.segments_reloaded`` per scan and
+        ``Store.segments_reloaded`` cumulatively). Returns the number of
+        segments evicted by this call.
+        """
+        if max_resident_segments < 0:
+            raise ValueError(
+                f"max_resident_segments must be >= 0, "
+                f"got {max_resident_segments}")
+        if path is not None:
+            self._spill_dir = path
+        if self._spill_dir is None:
+            raise ValueError(
+                "evict_to_disk needs a spill path on the first call")
+        self.max_resident_segments = int(max_resident_segments)
+        return self._enforce_residency()
+
+    def _enforce_residency(self) -> int:
+        """Evict oldest (lowest seg_id) resident session segments beyond
+        the cap. No-op until ``evict_to_disk`` sets one."""
+        if self.max_resident_segments is None:
+            return 0
+        resident = [j for j, g in enumerate(self.segments)
+                    if g.kind == "sessions" and not g.on_disk]
+        resident.sort(key=lambda j: self.segments[j].seg_id)
+        n_evict = max(0, len(resident) - self.max_resident_segments)
+        os.makedirs(self._spill_dir, exist_ok=True)
+        for j in resident[:n_evict]:
+            g = self.segments[j]
+            fp = os.path.join(self._spill_dir, f"seg_{g.seg_id}.bin")
+            with open(fp, "wb") as f:
+                f.write(g.blob)
+            self.segments[j] = replace(g, blob=b"", on_disk=True,
+                                       disk_bytes=len(g.blob))
+            self.segments_evicted += 1
+        return n_evict
+
+    def _read_spill(self, seg: Segment) -> bytes:
+        fp = os.path.join(self._spill_dir, f"seg_{seg.seg_id}.bin")
+        with open(fp, "rb") as f:
+            blob = f.read()
+        if len(blob) != seg.disk_bytes:
+            raise IOError(
+                f"spill blob for segment {seg.seg_id} is {len(blob)} "
+                f"bytes, expected {seg.disk_bytes} — spill dir corrupted?")
+        return blob
+
+    def _reload(self, seg: Segment) -> Segment:
+        """A transient resident copy of an evicted segment (the stored
+        segment stays on disk — reloads never grow resident bytes)."""
+        return replace(seg, blob=self._read_spill(seg), on_disk=False,
+                       disk_bytes=0)
 
     # -- the pruning query path --------------------------------------------
 
@@ -465,6 +565,8 @@ class Store:
             if wanted is not None and seg.seg_id not in wanted:
                 continue
             stats.segments_total += 1
+            if seg.on_disk:
+                stats.segments_on_disk += 1
             if time_range is not None and (seg.max_ts < lo
                                            or seg.min_ts > hi):
                 stats.pruned_time += 1
@@ -476,6 +578,12 @@ class Store:
                     int(c) in seg.code_counts for c in events_arr):
                 stats.pruned_events += 1
                 continue
+            if seg.on_disk:
+                # survived every metadata prune: pay the disk read, but
+                # only transiently — the stored segment stays evicted
+                seg = self._reload(seg)
+                stats.segments_reloaded += 1
+                self.segments_reloaded += 1
             stats.segments_decoded += 1
             stats.rows_decoded += seg.n
             if seg.kind == "sessions":
@@ -524,10 +632,14 @@ class Store:
         by_kind = {"events": 0, "sessions": 0}
         for seg in self.segments:
             by_kind[seg.kind] += 1
+        on_disk = sum(1 for seg in self.segments if seg.on_disk)
         return dict(
             segments=len(self.segments),
             event_segments=by_kind["events"],
             session_segments=by_kind["sessions"],
+            segments_on_disk=on_disk,
+            segments_evicted=self.segments_evicted,
+            segments_reloaded=self.segments_reloaded,
             events_appended=self.events_appended,
             late_appended=self.late_appended,
             compaction_watermark=self.compaction_watermark,
@@ -552,8 +664,12 @@ class Store:
                 code_counts={str(k): v for k, v in g.code_counts.items()},
                 col_bytes=g.col_bytes) for g in self.segments])
         for g in self.segments:
+            # evicted blobs round-trip through the spill dir, so a saved
+            # store is always fully materialized — load() never needs to
+            # know the source store was under a residency cap
+            blob = self._read_spill(g) if g.on_disk else g.blob
             with open(os.path.join(path, f"seg_{g.seg_id}.bin"), "wb") as f:
-                f.write(g.blob)
+                f.write(blob)
         tmp = os.path.join(path, "manifest.json.tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f)

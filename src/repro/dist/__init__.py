@@ -23,7 +23,9 @@ Public API by module:
   (fixed-capacity pytree bucketing, shared by MoE dispatch and the log
   pipeline), ``keyed_all_to_all`` (bucketing + all_to_all as one keyed
   repartition stage), ``make_distributed_sessionize`` and
-  ``make_distributed_histogram`` (standalone shuffle/psum jobs). The
+  ``make_distributed_histogram`` (standalone shuffle/psum jobs), and
+  ``gossip_all_gather`` (the serving fleet's fixed-shape occupancy
+  exchange — identity host-local, all-gather over a mesh axis). The
   multi-stage log pipeline composing these lives in
   ``repro.data.distpipe``.
 * ``compat`` — version-portable wrappers over the jax APIs that moved
@@ -45,7 +47,7 @@ from .sharding import (ShardingRules, REPLICATED, LOGICAL_AXES, constrain,
 from .mesh import make_production_mesh, make_host_mesh
 from .collectives import (mix64, shard_of_user, bucket_by_destination,
                           keyed_all_to_all, make_distributed_sessionize,
-                          make_distributed_histogram)
+                          make_distributed_histogram, gossip_all_gather)
 
 __all__ = [
     "shard_map", "use_mesh", "make_mesh", "abstract_mesh", "active_mesh",
@@ -54,4 +56,5 @@ __all__ = [
     "make_production_mesh", "make_host_mesh",
     "mix64", "shard_of_user", "bucket_by_destination", "keyed_all_to_all",
     "make_distributed_sessionize", "make_distributed_histogram",
+    "gossip_all_gather",
 ]

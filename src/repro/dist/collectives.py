@@ -166,6 +166,51 @@ def make_distributed_sessionize(mesh: Mesh, axis: str = "data", *,
     return wrapper
 
 
+# one compiled gossip exchange per (mesh, axis) — the vectors are tiny and
+# fixed-shape, so a single jitted all-gather serves every router tick
+# without retracing
+_GOSSIP_FNS: dict = {}
+
+
+def gossip_all_gather(vecs, mesh: Mesh | None = None,
+                      axis: str = "data") -> np.ndarray:
+    """Exchange fixed-shape occupancy vectors between fleet replicas.
+
+    ``vecs`` is ``(n_replicas, k)`` int-like — one small stats vector per
+    replica (the serving fleet gossips ``[free, pending, active]``). With
+    ``mesh=None`` every replica is host-local and the exchange is the
+    identity (the degenerate single-host fleet the tests and benchmarks
+    run). With a mesh, each shard holds its replicas' rows and the rows
+    are all-gathered over ``mesh[axis]`` so every shard sees the full
+    fleet — the same code path host-local tests exercise on 1-device
+    meshes. Always returns a host ``np.ndarray`` of shape
+    ``(n_replicas_total, k)`` int32: the router consumes it with plain
+    python, and a tiny device round-trip per tick would dwarf the gossip.
+    """
+    arr = np.asarray(vecs, np.int32)
+    if arr.ndim != 2:
+        raise ValueError(
+            f"gossip vectors must be (n_replicas, k), got {arr.shape}")
+    if mesh is None:
+        return arr
+    n_shards = mesh.shape[axis]
+    if arr.shape[0] % n_shards:
+        raise ValueError(
+            f"{arr.shape[0]} gossip rows do not shard evenly over "
+            f"mesh axis {axis!r} of size {n_shards}")
+    key = (mesh, axis)
+    fn = _GOSSIP_FNS.get(key)
+    if fn is None:
+        def local_fn(x):
+            return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+
+        fn = jax.jit(shard_map(local_fn, mesh=mesh,
+                               in_specs=(P(axis),), out_specs=P()))
+        _GOSSIP_FNS[key] = fn
+    with use_mesh(mesh):
+        return np.asarray(fn(jnp.asarray(arr)))
+
+
 def make_distributed_histogram(mesh: Mesh, axis: str = "data", *,
                                num_names: int):
     """Distributed event histogram: local segment_sum + psum (the daily

@@ -12,6 +12,14 @@ extras) — and prints the latency/throughput summary afterwards.
 path explicitly (one lockstep rectangle, no admission/eviction) — the
 silent family downgrade it used to hide is gone; unknown families now
 fail loudly at scheduler construction.
+
+``--replicas N`` scales the continuous path out to a serving fleet: N
+independent scheduler replicas behind a ``ReplicaRouter``
+(``serve/fleet.py``), with ``--route {rr,jsq,affinity}`` selecting
+round-robin, join-shortest-queue over occupancy gossip, or
+prefix-affinity (requires ``--paged --prefix-cache``) routing. The
+summary adds the fleet rollup: per-replica routed/admitted counts and
+the load-imbalance stat.
 """
 from __future__ import annotations
 
@@ -88,6 +96,17 @@ def main():
                          "assigned a seeded random class in [0, N); "
                          "higher classes admit first and are preempted "
                          "last (1 = everything priority 0)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a fleet of N independent "
+                         "scheduler replicas (each its own slab/prefix "
+                         "registry) behind a ReplicaRouter; 1 = the "
+                         "single-scheduler path")
+    ap.add_argument("--route", choices=("rr", "jsq", "affinity"),
+                    default="jsq",
+                    help="fleet routing policy for --replicas > 1: "
+                         "round-robin, join-shortest-queue on occupancy "
+                         "gossip, or prefix-affinity with JSQ spill "
+                         "(affinity requires --paged --prefix-cache)")
     args = ap.parse_args()
     if args.prefix_cache and not args.paged:
         ap.error("--prefix-cache requires --paged (it shares blocks of "
@@ -101,6 +120,15 @@ def main():
         ap.error("--priority must be >= 1 class")
     if args.batch and args.continuous:
         ap.error("--batch and --continuous are mutually exclusive")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1 and args.batch:
+        ap.error("--replicas needs the continuous path (the fleet routes "
+                 "an open request stream, not one rectangle)")
+    if args.replicas > 1 and args.route == "affinity" \
+            and not (args.paged and args.prefix_cache):
+        ap.error("--route affinity requires --paged --prefix-cache (it "
+                 "scores replicas by resident prefix chains)")
 
     import jax
     from ..configs import full_config, smoke_config
@@ -110,7 +138,8 @@ def main():
     from ..models import get_model
     from ..train import CheckpointManager, OptConfig, init_opt_state
     from ..serve import (Server, ServeConfig, ContinuousScheduler,
-                         SchedulerConfig, ServeMetrics, prompt_lengths)
+                         SchedulerConfig, ServeMetrics, prompt_lengths,
+                         ReplicaRouter, FleetConfig)
 
     log = generate(LogGenConfig(n_users=400, seed=0))
     b = log.batch
@@ -158,15 +187,22 @@ def main():
 
     # continuous (default): every family serves through the scheduler;
     # an unknown family raises at construction instead of downgrading.
-    n_req = args.requests or 3 * slots
-    metrics = ServeMetrics()
-    sched = ContinuousScheduler(api, params, SchedulerConfig(
+    # --replicas > 1 serves the same stream through a fleet of
+    # independent replicas behind the ReplicaRouter (same surface).
+    n_req = args.requests or 3 * slots * args.replicas
+    scfg = SchedulerConfig(
         batch=slots, buckets=(16, 32, 64),
         max_new_tokens=args.max_new_tokens,
         temperature=args.temperature, paged=args.paged,
         block_size=args.block_size,
         prefix_cache=args.prefix_cache,
-        overcommit=args.overcommit), metrics=metrics)
+        overcommit=args.overcommit)
+    if args.replicas > 1:
+        sched = ReplicaRouter(api, params, scfg, FleetConfig(
+            replicas=args.replicas, route=args.route))
+    else:
+        metrics = ServeMetrics()
+        sched = ContinuousScheduler(api, params, scfg, metrics=metrics)
     # over-commit caps the prompt so a preempted request's re-prefill
     # (prompt + generated) always fits the largest compiled bucket
     max_prompt = 33 if args.overcommit <= 1.0 else \
@@ -184,7 +220,7 @@ def main():
         names = _decode_names(outs[rid], d, NUM_SPECIALS)
         print(f"request {rid}: "
               + " -> ".join(n.split(":")[-1] for n in names))
-    summ = metrics.summary()
+    summ = sched.summary() if args.replicas > 1 else metrics.summary()
     print("served {requests} requests, {tokens} tokens, "
           "{tokens_per_sec:.1f} tok/s, p50 latency {p50_latency_s:.3f}s,"
           " p99 {p99_latency_s:.3f}s".format(**summ))
@@ -210,9 +246,23 @@ def main():
               "{prefill_tokens_skipped} prefill tokens skipped, "
               "mean TTFT hit {mean_ttft_hit_s:.4f}s vs miss "
               "{mean_ttft_miss_s:.4f}s".format(**summ))
-    print(f"jit traces: {dict(sched.trace_counts)} "
-          f"(prefills={sched.prefills}, decode_steps="
-          f"{sched.decode_steps})")
+    if args.replicas > 1:
+        f = summ["fleet"]
+        print("fleet: {n} replicas, route={route}, routed {routed}, "
+              "admitted {adm}, load imbalance {imb:.2f} "
+              "(max/mean admitted), {ticks} gossip ticks".format(
+                  n=f["replicas"], route=f["route"],
+                  routed=f["routed_per_replica"],
+                  adm=f["admitted_per_replica"],
+                  imb=f["load_imbalance"], ticks=f["gossip_ticks"]))
+        for ri, rep in enumerate(sched.replicas):
+            print(f"  replica {ri}: jit traces {dict(rep.trace_counts)} "
+                  f"(prefills={rep.prefills}, "
+                  f"decode_steps={rep.decode_steps})")
+    else:
+        print(f"jit traces: {dict(sched.trace_counts)} "
+              f"(prefills={sched.prefills}, decode_steps="
+              f"{sched.decode_steps})")
 
 
 if __name__ == "__main__":

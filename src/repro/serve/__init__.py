@@ -18,7 +18,14 @@
   the scheduler is asserted bit-equal against.
 * ``metrics`` — ``ServeMetrics``: submit/admit/first-token/finish
   timestamps, tokens/sec and p50/p99 latency + TTFT, plus state-residency
-  (live blocks or rows / total) and peak-resident bytes.
+  (live blocks or rows / total) and peak-resident bytes;
+  ``merge_summaries`` rolls K per-replica instances into one fleet
+  summary (request-level merge + load-imbalance stat).
+* ``fleet`` — ``ReplicaRouter`` / ``FleetConfig``: N independent
+  scheduler replicas (each its own slab/prefix registry/over-commit)
+  behind the single ``submit``/``step``/``run`` surface; round-robin,
+  join-shortest-queue on occupancy gossip (``dist.gossip_all_gather``),
+  or prefix-affinity routing with JSQ spill.
 * ``paged`` — ``BlockPool``: the paged-KV block slab + refcounted
   free-list allocator behind ``PagedKVState`` (``SchedulerConfig.paged``);
   long and short requests share fixed blocks instead of per-slot
@@ -32,13 +39,16 @@ from .serve_loop import Server, ServeConfig, prompt_lengths
 from .scheduler import ContinuousScheduler, SchedulerConfig, Request
 from .cache import (DecodeState, DenseKVState, PagedKVState, RecurrentState,
                     HybridState, CrossAttnState, make_decode_state)
-from .metrics import ServeMetrics
+from .metrics import ServeMetrics, merge_metrics, merge_summaries
 from .paged import (BlockPool, PrefixPlan, blocks_for, chain_hash,
                     prefix_hashes)
+from .fleet import ReplicaRouter, FleetConfig
 
 __all__ = ["Server", "ServeConfig", "prompt_lengths",
            "ContinuousScheduler", "SchedulerConfig", "Request",
            "DecodeState", "DenseKVState", "PagedKVState", "RecurrentState",
            "HybridState", "CrossAttnState", "make_decode_state",
-           "ServeMetrics", "BlockPool", "PrefixPlan", "blocks_for",
+           "ServeMetrics", "merge_metrics", "merge_summaries",
+           "ReplicaRouter", "FleetConfig",
+           "BlockPool", "PrefixPlan", "blocks_for",
            "chain_hash", "prefix_hashes"]

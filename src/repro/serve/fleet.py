@@ -1,0 +1,278 @@
+"""Multi-replica serving fleet: a router over independent schedulers.
+
+The paper's scaling thesis is that one unified substrate absorbs traffic
+growth *horizontally* — more identical workers behind a thin routing
+tier, not per-application special cases. This module applies that move
+to serving: a ``ReplicaRouter`` fronts N completely independent
+``ContinuousScheduler`` replicas (each with its own ``DecodeState`` or
+``BlockPool`` slab, prefix-cache registry, and over-commit config)
+behind the same ``submit`` / ``step`` / ``run`` surface a single
+scheduler speaks, so every existing driver — the benchmarks, the CLI,
+``Server.generate``-style loops — scales out without changing shape.
+
+**The router tick.** Each ``step()`` is one fleet round:
+
+1. **Gossip refresh** — every replica's ``occupancy_snapshot()``
+   (``[free, pending, active]`` int32) is stacked and exchanged through
+   ``dist.collectives.gossip_all_gather``. Host-local (``gossip_mesh is
+   None``) the exchange is the identity; on a mesh it is a fixed-shape
+   all-gather over the gossip axis — same code path either way, which is
+   what lets the tests pin the fleet semantics on one host.
+2. **Route + submit** happen between ticks: ``submit`` consults the
+   *last* gossip plus a router-local since-gossip delta (requests this
+   router sent each replica after the snapshot), so routing stays sane
+   even though gossip is one tick stale — the staleness the real fleet
+   would have.
+3. **Step every replica once** (``step_once`` — idle replicas return
+   immediately), collect each replica's emissions, and remap local rids
+   into the router's global rid namespace.
+
+**Routing policies** (``FleetConfig.route``):
+
+* ``rr`` — round-robin. The baseline: ignores load entirely.
+* ``jsq`` — join-shortest-queue on the gossip vector: route to the
+  replica with the fewest outstanding requests (gossiped pending +
+  active + since-gossip routed delta), breaking ties toward more free
+  blocks, then lower index (deterministic).
+* ``affinity`` — prefix affinity: hash the prompt's leading *full*
+  blocks with the chained content hash from ``serve/paged.py`` and score
+  each replica by how many leading links are resident in its registry
+  (``BlockPool.chain_hits`` — read-only). Route to the hottest replica
+  so PR 6's prefix cache keeps its hit rate instead of being diluted N
+  ways; **spill to JSQ** when the preferred replica's backlog (gossiped
+  pending + since-gossip delta) has reached ``FleetConfig.spill_queue``
+  — a hot replica that is saturated would turn affinity into a convoy.
+  Zero resident links anywhere (cold prefix) also falls through to JSQ.
+
+**Bit-equality.** Replicas decode greedily (``temperature=0``) in the
+serving benchmarks, and a request's output depends only on its own
+prompt — never on which replica served it or who shared its blocks — so
+fleet outputs are bit-equal to a single-replica oracle run of the same
+stream. ``benchmarks/serve_tput.py`` gates on it.
+
+**Metrics.** Each replica carries its own ``ServeMetrics`` (one shared
+injectable clock); ``summary()`` rolls them up through
+``metrics.merge_summaries`` — request-level merge, so percentiles are
+exactly those of the union stream — and adds routing stats (per-replica
+routed/admitted counts, ``load_imbalance`` = max/mean admitted,
+gossip tick count).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..dist.collectives import gossip_all_gather
+from ..models.registry import ModelApi
+from .metrics import ServeMetrics, merge_summaries
+from .paged import prefix_hashes
+from .scheduler import ContinuousScheduler, SchedulerConfig
+
+# gossip vector layout (must match ContinuousScheduler.occupancy_snapshot)
+GOSSIP_FREE, GOSSIP_PENDING, GOSSIP_ACTIVE = 0, 1, 2
+GOSSIP_WIDTH = 3
+
+ROUTES = ("rr", "jsq", "affinity")
+
+
+@dataclass
+class FleetConfig:
+    replicas: int = 2
+    route: str = "jsq"               # "rr" | "jsq" | "affinity"
+    # affinity only: spill to JSQ once the preferred replica's backlog
+    # (gossiped pending + requests routed there since the last gossip)
+    # reaches this depth. None = one full slot table's worth.
+    spill_queue: int | None = None
+    gossip_axis: str = "data"        # mesh axis the gossip gathers over
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        if self.route not in ROUTES:
+            raise ValueError(
+                f"route must be one of {ROUTES}, got {self.route!r}")
+
+
+class ReplicaRouter:
+    """Front N independent scheduler replicas behind one scheduler API.
+
+    Construction builds ``fleet.replicas`` ``ContinuousScheduler``s from
+    the same ``SchedulerConfig`` — equal per-replica slab bytes by
+    construction, which is the honest basis for the fleet-vs-single
+    scaling claim. ``mesh`` (the model/state mesh) is forwarded to every
+    replica; ``gossip_mesh`` drives only the occupancy exchange and is
+    None for the host-local fleets the tests and benchmarks run.
+    """
+
+    def __init__(self, api: ModelApi, params, cfg: SchedulerConfig,
+                 fleet: FleetConfig, mesh=None, gossip_mesh=None,
+                 clock=None):
+        if fleet.route == "affinity" and not (cfg.paged and
+                                              cfg.prefix_cache):
+            raise ValueError(
+                "route='affinity' scores replicas by resident prefix "
+                "chains, which only exist with paged=True + "
+                "prefix_cache=True")
+        self.cfg = cfg
+        self.fleet = fleet
+        self.gossip_mesh = gossip_mesh
+        self.replicas = [
+            ContinuousScheduler(api, params, cfg, mesh=mesh)
+            for _ in range(fleet.replicas)]
+        self.reset_metrics(clock)
+        n = fleet.replicas
+        # affinity spill threshold: a replica already holding a full slot
+        # table of backlog gains nothing from one more hot request
+        self._spill = (cfg.batch if fleet.spill_queue is None
+                       else int(fleet.spill_queue))
+        # last gossip exchange + per-replica requests routed since it
+        self._gossip = np.zeros((n, GOSSIP_WIDTH), np.int32)
+        self._gossip[:, GOSSIP_FREE] = [
+            r.occupancy_snapshot()[GOSSIP_FREE] for r in self.replicas]
+        self._since = np.zeros(n, np.int64)
+        self._rr_next = 0
+        self._next_rid = 0
+        # global rid -> (replica, local rid); per-replica local -> global
+        self._placement: dict[int, tuple[int, int]] = {}
+        self._grid: list[dict[int, int]] = [{} for _ in range(n)]
+        self.routed = np.zeros(n, np.int64)
+        self.gossip_ticks = 0
+
+    def reset_metrics(self, clock=None) -> None:
+        """Fresh per-replica ``ServeMetrics`` (one shared clock) — the
+        benchmarks call this after warmup so compile time never pollutes
+        the measured window."""
+        kw = {} if clock is None else dict(clock=clock)
+        for r in self.replicas:
+            r.metrics = ServeMetrics(**kw)
+
+    # -- fleet-wide views --------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return sum(r.num_active for r in self.replicas)
+
+    @property
+    def num_pending(self) -> int:
+        return sum(r.num_pending for r in self.replicas)
+
+    @property
+    def has_work(self) -> bool:
+        return any(r.has_work for r in self.replicas)
+
+    @property
+    def preemptions(self) -> int:
+        return sum(r.preemptions for r in self.replicas)
+
+    def summary(self) -> dict:
+        """Fleet rollup of every replica's metrics (request-level merge,
+        local rids remapped to the router's global namespace) plus
+        routing stats."""
+        out = merge_summaries([r.metrics for r in self.replicas],
+                              rid_maps=self._grid)
+        out["fleet"].update(
+            route=self.fleet.route,
+            routed_per_replica=self.routed.tolist(),
+            gossip_ticks=self.gossip_ticks,
+        )
+        return out
+
+    # -- routing -----------------------------------------------------------
+
+    def _outstanding(self, ri: int) -> int:
+        """Requests replica ``ri`` is on the hook for, as seen from the
+        router: gossiped queue depth + admitted count, plus everything
+        this router sent it after that snapshot."""
+        g = self._gossip[ri]
+        return int(g[GOSSIP_PENDING] + g[GOSSIP_ACTIVE] + self._since[ri])
+
+    def _jsq(self) -> int:
+        """Join-shortest-queue: fewest outstanding, ties toward more free
+        blocks (the gossip's resource column), then lowest index."""
+        return min(
+            range(len(self.replicas)),
+            key=lambda ri: (self._outstanding(ri),
+                            -int(self._gossip[ri][GOSSIP_FREE]), ri))
+
+    def _affinity(self, toks: np.ndarray) -> int:
+        """Prefix affinity with JSQ spill: pick the replica whose pool
+        registry holds the longest resident chain of the prompt's leading
+        full blocks; fall back to JSQ when no replica is warm or the
+        preferred one is saturated."""
+        hashes = prefix_hashes(toks, self.cfg.block_size)
+        # the last block a request shares is never its final block (the
+        # boundary block is copied, not shared), but chain_hits is a
+        # *score*, not a plan — deeper resident chains mean warmer caches
+        hits = [r.pool.chain_hits(hashes) for r in self.replicas]
+        best = max(hits)
+        if best == 0:
+            return self._jsq()                     # cold prefix everywhere
+        warm = [ri for ri, h in enumerate(hits) if h == best]
+        # ties between equally-warm replicas resolve by JSQ
+        ri = min(warm, key=lambda i: (self._outstanding(i), i))
+        backlog = int(self._gossip[ri][GOSSIP_PENDING] + self._since[ri])
+        if backlog >= self._spill:
+            return self._jsq()                     # saturated: spill
+        return ri
+
+    def _route(self, toks: np.ndarray) -> int:
+        if self.fleet.route == "rr":
+            ri = self._rr_next
+            self._rr_next = (ri + 1) % len(self.replicas)
+            return ri
+        if self.fleet.route == "jsq":
+            return self._jsq()
+        return self._affinity(toks)
+
+    # -- the single-scheduler surface --------------------------------------
+
+    def submit(self, tokens, max_new_tokens: int | None = None,
+               extra: dict | None = None, priority: int = 0) -> int:
+        """Route one request to a replica; returns its *global* rid."""
+        toks = np.asarray(tokens, np.int32).reshape(-1)
+        ri = self._route(toks)
+        local = self.replicas[ri].submit(
+            toks, max_new_tokens=max_new_tokens, extra=extra,
+            priority=priority)
+        rid = self._next_rid
+        self._next_rid += 1
+        self._placement[rid] = (ri, local)
+        self._grid[ri][local] = rid
+        self._since[ri] += 1
+        self.routed[ri] += 1
+        return rid
+
+    def _gossip_tick(self) -> None:
+        vecs = np.stack([r.occupancy_snapshot() for r in self.replicas])
+        self._gossip = gossip_all_gather(
+            vecs, mesh=self.gossip_mesh, axis=self.fleet.gossip_axis)
+        self._since[:] = 0
+        self.gossip_ticks += 1
+
+    def step(self) -> dict[int, int]:
+        """One fleet round: refresh gossip, step every replica once, and
+        return the merged emissions keyed by global rid."""
+        self._gossip_tick()
+        emissions: dict[int, int] = {}
+        for ri, rep in enumerate(self.replicas):
+            for local, tok in rep.step_once().items():
+                emissions[self._grid[ri][local]] = tok
+        return emissions
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drain the fleet; returns {global rid: (n_tokens,) int32} for
+        every request finished since the last ``run`` and releases them,
+        mirroring ``ContinuousScheduler.run``."""
+        while self.has_work:
+            self.step()
+        out: dict[int, np.ndarray] = {}
+        for ri, rep in enumerate(self.replicas):
+            for local, toks in rep.run().items():
+                out[self._grid[ri][local]] = toks
+        # leave a fresh idle-state gossip view: the last in-loop exchange
+        # ran while work was still in flight, and routing the next stream
+        # off that stale snapshot would be arbitrary (and nondeterministic
+        # across warmup/measured replays of the same stream)
+        self._gossip_tick()
+        return out

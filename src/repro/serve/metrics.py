@@ -11,6 +11,14 @@ admission -> first token, the prefill the request actually ran), both
 exposed separately so a loaded benchmark can tell scheduling delay from
 compute delay.
 
+``merge_summaries`` rolls K per-replica ``ServeMetrics`` up into one
+fleet-level summary by merging at the *request* level (not by averaging
+percentiles — percentiles do not compose), so the merged numbers are
+exactly what one combined ``ServeMetrics`` over the union stream would
+report. KV capacity/peak fields sum across replicas: each replica owns an
+independent slab. The rollup adds a ``fleet`` section with per-replica
+admitted counts and the load-imbalance stat ``max/mean admitted``.
+
 Requests carry a **priority class**; ``summary()["per_priority"]``
 breaks latency, TTFT, queue wait, and preemption counts out per class —
 the numbers the SLO gate in ``benchmarks/serve_tput.py`` judges
@@ -228,3 +236,57 @@ class ServeMetrics:
             **self._kv_summary(),
             **self._prefix_summary(),
         )
+
+
+def merge_metrics(parts: list[ServeMetrics],
+                  rid_maps: list[dict[int, int]] | None = None)\
+        -> ServeMetrics:
+    """Fold K per-replica ``ServeMetrics`` into one combined instance.
+
+    Request records are merged verbatim (every derived stat — percentiles,
+    throughput, per-priority splits — then falls out of the ordinary
+    ``summary()`` over the union, which is the invariant the property test
+    pins: merging K split streams == one combined stream). ``rid_maps[i]``
+    remaps replica ``i``'s local rids into the fleet's global namespace;
+    without maps the rids must already be globally unique — a collision
+    raises instead of silently overwriting a request.
+
+    KV fields sum across parts (independent slabs: fleet capacity and
+    fleet peak residency are the sums; the per-replica peaks are
+    concurrent by construction since every replica ticks each round).
+    """
+    out = ServeMetrics(clock=parts[0].clock if parts else time.perf_counter)
+    for i, m in enumerate(parts):
+        rmap = rid_maps[i] if rid_maps is not None else None
+        for rid, rec in m.requests.items():
+            key = rid if rmap is None else rmap[rid]
+            if key in out.requests:
+                raise ValueError(
+                    f"rid {key} appears in more than one part — pass "
+                    "rid_maps to remap per-replica rids into a global "
+                    "namespace")
+            out.requests[key] = rec
+        out.kv_total_blocks += m.kv_total_blocks
+        out.kv_live_blocks += m.kv_live_blocks
+        out.kv_live_blocks_peak += m.kv_live_blocks_peak
+        out.kv_referenced_peak += m.kv_referenced_peak
+        out.kv_block_bytes = max(out.kv_block_bytes, m.kv_block_bytes)
+    return out
+
+
+def merge_summaries(parts: list[ServeMetrics],
+                    rid_maps: list[dict[int, int]] | None = None) -> dict:
+    """Fleet rollup: ``merge_metrics(parts).summary()`` plus a ``fleet``
+    section — per-replica admitted counts and ``load_imbalance`` =
+    max/mean admitted (1.0 = perfectly balanced; a router that funnels
+    everything to one replica of four scores 4.0)."""
+    merged = merge_metrics(parts, rid_maps).summary()
+    admitted = [sum(1 for r in m.requests.values() if r.admit is not None)
+                for m in parts]
+    mean = sum(admitted) / len(admitted) if admitted else 0.0
+    merged["fleet"] = dict(
+        replicas=len(parts),
+        admitted_per_replica=admitted,
+        load_imbalance=(max(admitted) / mean) if mean else 0.0,
+    )
+    return merged

@@ -385,6 +385,23 @@ class BlockPool:
         hash is ``h``, or None."""
         return self._hash_to_block.get(h)
 
+    def chain_hits(self, hashes: list[bytes]) -> int:
+        """How many *leading* links of a prefix hash chain are resident in
+        this pool's registry. Strictly read-only — no refcount bumps, no
+        reservations — so a fleet router can probe every replica's pool
+        when scoring prefix affinity without perturbing allocator state.
+
+        Counts stop at the first miss: a resident block deeper in the
+        chain is unusable without its ancestors (the chained hash pins
+        absolute positions), so it must not count as affinity.
+        """
+        n = 0
+        for h in hashes:
+            if h not in self._hash_to_block:
+                break
+            n += 1
+        return n
+
     def find_extension(self, parent: bytes, tokens) -> int | None:
         """A resident registered block that *extends* chain ``parent`` and
         whose leading tokens equal ``tokens`` — the COW donor for a

@@ -356,6 +356,35 @@ class ContinuousScheduler:
     def num_pending(self) -> int:
         return sum(len(dq) for dq in self._pending.values())
 
+    @property
+    def has_work(self) -> bool:
+        """True while any request is active or queued — the fleet router's
+        drain condition (and a cheap guard before ``step_once``)."""
+        return bool(self._active.any()) or self.num_pending > 0
+
+    def occupancy_snapshot(self) -> np.ndarray:
+        """The occupancy gossip vector: ``[free, pending, active]`` int32.
+
+        ``free`` is the resource admission is actually gated on — free pool
+        blocks in paged mode, free slot rows in dense mode. Host-side
+        counters only (no device sync), so a fleet router can refresh it
+        every tick for free. Fixed shape/dtype by contract: the fleet's
+        gossip all-gather stacks one of these per replica.
+        """
+        pool = self.pool
+        free = (pool.free_blocks if pool is not None
+                else self.cfg.batch - self.num_active)
+        return np.array([free, self.num_pending, self.num_active], np.int32)
+
+    def step_once(self) -> dict[int, int]:
+        """Non-blocking step: one decode step if there is work, else an
+        immediate ``{}`` without touching the device — so a fleet router
+        can tick every replica each round without idle replicas paying for
+        an admission scan or a garbage decode."""
+        if not self.has_work:
+            return {}
+        return self.step()
+
     def _bucket_for(self, n: int) -> int:
         for b in sorted(self.cfg.buckets):
             if n <= b:

@@ -24,6 +24,8 @@ decode-loop correctness fixes:
 """
 from __future__ import annotations
 
+import collections
+import warnings
 from dataclasses import dataclass
 
 import jax
@@ -54,6 +56,11 @@ class ServeConfig:
     overcommit: float = 1.0
     # run BlockPool.check_invariants after every evict/preempt
     debug: bool = False
+    # cap on cached (batch, bucket) schedulers: each pins its compiled
+    # prefill/decode fns AND its decode-state slab on device, so a
+    # long-lived server seeing many shapes must not grow without bound —
+    # least-recently-used shapes are evicted (loudly, via warnings.warn)
+    max_schedulers: int = 8
 
 
 def prompt_lengths(prompts: np.ndarray) -> np.ndarray:
@@ -77,7 +84,11 @@ class Server:
         self._decode = jax.jit(
             lambda p, tok, st, i: api.decode_step(p, tok, st, i))
         self.decode_calls = 0        # batch-path decode_step invocations
-        self._schedulers: dict[tuple, ContinuousScheduler] = {}
+        # LRU over (batch, bucket) shapes, capped at scfg.max_schedulers
+        self._schedulers: collections.OrderedDict[tuple,
+                                                  ContinuousScheduler] = \
+            collections.OrderedDict()
+        self.scheduler_evictions = 0
 
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0.0:
@@ -102,23 +113,47 @@ class Server:
 
     def scheduler_for(self, batch: int, bucket: int) -> ContinuousScheduler:
         """The cached continuous scheduler for a (slots, bucket) shape —
-        cached so repeated generate() calls reuse the compiled fns."""
+        cached so repeated generate() calls reuse the compiled fns.
+
+        The cache is a true LRU capped at ``scfg.max_schedulers``: every
+        cached scheduler pins compiled executables and a device slab, so
+        a long-lived fleet process cycling through many shapes would
+        otherwise accrete them forever. Evicting the coldest shape is
+        safe — ``generate`` drains its scheduler synchronously, so a
+        cached scheduler is never mid-request — but it throws away that
+        shape's compilation, so the eviction is *loud* (a
+        ``warnings.warn`` naming the shape): seeing it repeatedly means
+        ``max_schedulers`` is too small for the workload's shape mix.
+        """
         key = (batch, bucket)
-        if key not in self._schedulers:
-            self._schedulers[key] = ContinuousScheduler(
-                self.api, self.params,
-                SchedulerConfig(batch=batch, buckets=(bucket,),
-                                max_new_tokens=self.scfg.max_new_tokens,
-                                temperature=self.scfg.temperature,
-                                seed=self.scfg.seed,
-                                paged=self.scfg.paged,
-                                block_size=self.scfg.block_size,
-                                num_blocks=self.scfg.num_blocks,
-                                prefix_cache=self.scfg.prefix_cache,
-                                overcommit=self.scfg.overcommit,
-                                debug=self.scfg.debug),
-                mesh=self.mesh)
-        return self._schedulers[key]
+        sched = self._schedulers.get(key)
+        if sched is not None:
+            self._schedulers.move_to_end(key)
+            return sched
+        while len(self._schedulers) >= max(1, self.scfg.max_schedulers):
+            old_key, _ = self._schedulers.popitem(last=False)
+            self.scheduler_evictions += 1
+            warnings.warn(
+                f"Server scheduler cache full ({self.scfg.max_schedulers} "
+                f"shapes): evicting least-recently-used shape "
+                f"(batch, bucket)={old_key} and its compiled fns — raise "
+                "ServeConfig.max_schedulers if this recurs",
+                RuntimeWarning, stacklevel=2)
+        sched = ContinuousScheduler(
+            self.api, self.params,
+            SchedulerConfig(batch=batch, buckets=(bucket,),
+                            max_new_tokens=self.scfg.max_new_tokens,
+                            temperature=self.scfg.temperature,
+                            seed=self.scfg.seed,
+                            paged=self.scfg.paged,
+                            block_size=self.scfg.block_size,
+                            num_blocks=self.scfg.num_blocks,
+                            prefix_cache=self.scfg.prefix_cache,
+                            overcommit=self.scfg.overcommit,
+                            debug=self.scfg.debug),
+            mesh=self.mesh)
+        self._schedulers[key] = sched
+        return sched
 
     def generate(self, prompts: np.ndarray, extra: dict | None = None):
         """prompts: (B, L) int32, PAD-padded on the right. Returns

@@ -1,0 +1,476 @@
+"""Multi-replica serving fleet (repro.serve.fleet) + the satellites that
+ride along with it: occupancy gossip, routing policies (rr / JSQ /
+prefix-affinity with spill), fleet-vs-single bit-equality on the real
+smoke model, ``merge_summaries`` metrics properties (request-level merge
+== one combined stream, ttft decomposition, stable percentile keys),
+the segment store's disk aging (``Store.evict_to_disk``), and the
+``Server`` scheduler-cache LRU cap.
+
+Machinery tests run on the deterministic stub ModelApi from
+``test_serve`` (fast, exact expected outputs); one test drives the real
+smoke behaviour LM so routing is proven output-invariant end to end.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.configs import smoke_config
+from repro.data.pipeline import EOS_ID
+from repro.data.store import Store, StoreConfig
+from repro.dist import gossip_all_gather, make_host_mesh
+from repro.models.registry import get_model
+from repro.serve import (ContinuousScheduler, FleetConfig, ReplicaRouter,
+                         Server, ServeConfig, ServeMetrics, merge_metrics,
+                         merge_summaries, prefix_hashes)
+from repro.serve.fleet import GOSSIP_ACTIVE, GOSSIP_FREE, GOSSIP_PENDING
+
+from test_serve import SchedulerConfig, VOCAB, _stub_api, _stub_expected
+from test_store import _events, _write
+
+EOS_AFTER = 50  # stub never EOSes early: budgets control lifetimes
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = smoke_config("behavior-lm-100m").with_(vocab_size=VOCAB,
+                                                 max_cache_len=64)
+    api = get_model(cfg)
+    return api, api.init(jax.random.PRNGKey(0))
+
+
+def _prompts(rng, n, lo=3, hi=9):
+    return [rng.integers(4, VOCAB, int(rng.integers(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+def _paged_cfg(**kw):
+    kw.setdefault("batch", 4)
+    kw.setdefault("buckets", (8, 16))
+    kw.setdefault("max_new_tokens", 4)
+    kw.setdefault("paged", True)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("num_blocks", 31)
+    return SchedulerConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# scheduler surface the router builds on
+# ---------------------------------------------------------------------------
+
+def test_occupancy_snapshot_tracks_queue_and_pool():
+    sched = ContinuousScheduler(_stub_api(EOS_AFTER), {}, _paged_cfg())
+    free0 = sched.pool.free_blocks
+    assert sched.occupancy_snapshot().tolist() == [free0, 0, 0]
+    assert not sched.has_work
+    for p in _prompts(np.random.default_rng(0), 6):
+        sched.submit(p, max_new_tokens=4)
+    snap = sched.occupancy_snapshot()
+    assert snap[GOSSIP_PENDING] == 6 and snap[GOSSIP_ACTIVE] == 0
+    assert snap.dtype == np.int32 and snap.shape == (3,)
+    sched.step()
+    snap = sched.occupancy_snapshot()
+    assert snap[GOSSIP_ACTIVE] == sched.num_active > 0
+    assert snap[GOSSIP_PENDING] == sched.num_pending
+    assert snap[GOSSIP_FREE] < free0          # admitted rows hold blocks
+    sched.run()
+    assert sched.occupancy_snapshot().tolist() == [free0, 0, 0]
+
+
+def test_step_once_is_noop_when_idle():
+    sched = ContinuousScheduler(_stub_api(EOS_AFTER), {}, _paged_cfg())
+    before = sched.decode_steps
+    assert sched.step_once() == {}
+    assert sched.decode_steps == before
+    sched.submit(np.arange(4, 9, dtype=np.int32), max_new_tokens=2)
+    assert sched.has_work
+    emitted = {}
+    while sched.has_work:
+        emitted.update(sched.step_once())
+    assert 0 in emitted and sched.decode_steps > before
+
+
+def test_chain_hits_is_read_only():
+    sched = ContinuousScheduler(
+        _stub_api(EOS_AFTER), {},
+        _paged_cfg(prefix_cache=True, max_new_tokens=6))
+    p = np.arange(4, 16, dtype=np.int32)      # 3 full 4-token blocks
+    sched.submit(p, max_new_tokens=6)
+    sched.step()                              # admit: registers the chain
+    hashes = prefix_hashes(p, 4)
+    free = sched.pool.free_blocks
+    hits = sched.pool.chain_hits(hashes)
+    assert hits == len(hashes) > 0
+    assert sched.pool.chain_hits(hashes) == hits      # idempotent
+    assert sched.pool.free_blocks == free             # no allocation
+    assert sched.pool.chain_hits([b"no-such-hash"]) == 0
+    # a chain broken at link 0 scores 0 even if later links were resident
+    assert sched.pool.chain_hits([b"missing"] + hashes) == 0
+    sched.run()
+    assert sched.pool.chain_hits(hashes) == 0         # registry died
+
+
+# ---------------------------------------------------------------------------
+# gossip all-gather
+# ---------------------------------------------------------------------------
+
+def test_gossip_all_gather_host_local_identity():
+    vecs = np.array([[5, 1, 2], [9, 0, 3]], np.int64)
+    out = gossip_all_gather(vecs, mesh=None)
+    assert out.dtype == np.int32
+    assert np.array_equal(out, vecs)
+    with pytest.raises(ValueError):
+        gossip_all_gather(np.array([1, 2, 3]))        # not (n, width)
+
+
+def test_gossip_all_gather_mesh_path():
+    mesh = make_host_mesh(data=1, model=1)
+    vecs = np.array([[5, 1, 2], [9, 0, 3], [7, 7, 7]], np.int32)
+    out = gossip_all_gather(vecs, mesh=mesh, axis="data")
+    assert np.array_equal(out, vecs)
+    # row count must tile over the gossip axis
+    with pytest.raises(ValueError):
+        gossip_all_gather(vecs, mesh=make_host_mesh(data=2, model=1),
+                          axis="data")
+
+
+# ---------------------------------------------------------------------------
+# routing policies (stub model: outputs exactly predictable)
+# ---------------------------------------------------------------------------
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError, match="replicas"):
+        FleetConfig(replicas=0)
+    with pytest.raises(ValueError, match="route"):
+        FleetConfig(route="random")
+    with pytest.raises(ValueError, match="affinity"):
+        ReplicaRouter(_stub_api(EOS_AFTER), {}, _paged_cfg(),
+                      FleetConfig(replicas=2, route="affinity"))
+
+
+def test_round_robin_cycles_replicas():
+    router = ReplicaRouter(_stub_api(EOS_AFTER), {}, _paged_cfg(),
+                           FleetConfig(replicas=3, route="rr"))
+    prompts = _prompts(np.random.default_rng(1), 7)
+    rids = [router.submit(p, max_new_tokens=3) for p in prompts]
+    assert rids == list(range(7))             # global rids: submit order
+    assert router.routed.tolist() == [3, 2, 2]
+    outs = router.run()
+    assert not router.has_work
+    for rid, p in zip(rids, prompts):
+        np.testing.assert_array_equal(
+            outs[rid], _stub_expected(p, 3, EOS_AFTER))
+
+
+def test_jsq_balances_and_respects_since_gossip_delta():
+    router = ReplicaRouter(_stub_api(EOS_AFTER), {}, _paged_cfg(),
+                           FleetConfig(replicas=4, route="jsq"))
+    # all submits land between gossip ticks: only the since-gossip delta
+    # can tell the replicas apart, so JSQ must still spread the burst
+    for p in _prompts(np.random.default_rng(2), 8):
+        router.submit(p, max_new_tokens=3)
+    assert sorted(router.routed.tolist()) == [2, 2, 2, 2]
+    router.run()
+    # a loaded replica is avoided: stuff replica 0's queue out-of-band,
+    # refresh gossip, and the next routed request must land on replica 1
+    rr = ReplicaRouter(_stub_api(EOS_AFTER), {}, _paged_cfg(),
+                       FleetConfig(replicas=2, route="jsq"))
+    rr.replicas[0].submit(np.arange(4, 8, dtype=np.int32), max_new_tokens=3)
+    rr.replicas[0].submit(np.arange(4, 8, dtype=np.int32), max_new_tokens=3)
+    rr._gossip_tick()
+    rr.submit(np.arange(4, 8, dtype=np.int32), max_new_tokens=3)
+    assert rr.routed.tolist() == [0, 1]
+    for rep in rr.replicas:      # out-of-band submits have no global rid:
+        rep.run()                # drain replicas directly
+
+
+def test_affinity_routes_hot_replica_and_spills_when_saturated():
+    fleet = FleetConfig(replicas=2, route="affinity", spill_queue=3)
+    router = ReplicaRouter(
+        _stub_api(EOS_AFTER), {},
+        _paged_cfg(prefix_cache=True, max_new_tokens=6, num_blocks=63),
+        fleet)
+    prefix = np.arange(4, 16, dtype=np.int32)         # 3 full blocks
+    tails = [np.array([20 + i], np.int32) for i in range(9)]
+    # cold submit falls through to JSQ (replica 0 by tie-break)
+    router.submit(np.concatenate([prefix, tails[0]]), max_new_tokens=6)
+    assert router.routed.tolist() == [1, 0]
+    router.step()                                     # admit -> registry hot
+    # warm submits chase the resident chain on replica 0
+    for t in tails[1:4]:
+        router.submit(np.concatenate([prefix, t]), max_new_tokens=6)
+        router.step()
+    assert router.routed.tolist() == [4, 0]
+    # replica 0's 4 slots are now all in flight; pile hot submits onto its
+    # queue without stepping — once the backlog (gossiped pending=1: the
+    # last tick snapshotted before that round's admit, plus the
+    # since-gossip delta) reaches spill_queue=3, affinity must spill the
+    # remainder to replica 1
+    for t in tails[4:]:
+        router.submit(np.concatenate([prefix, t]), max_new_tokens=6)
+    assert router.routed.tolist() == [6, 3], \
+        "saturated hot replica never spilled"
+    outs = router.run()
+    assert not router.has_work
+    np.testing.assert_array_equal(
+        outs[0], _stub_expected(np.concatenate([prefix, tails[0]]),
+                                6, EOS_AFTER))
+
+
+def test_fleet_summary_merges_replica_metrics():
+    router = ReplicaRouter(_stub_api(EOS_AFTER), {}, _paged_cfg(),
+                           FleetConfig(replicas=2, route="rr"))
+    prompts = _prompts(np.random.default_rng(3), 6)
+    for p in prompts:
+        router.submit(p, max_new_tokens=3)
+    router.run()
+    s = router.summary()
+    assert s["requests"] == 6
+    assert s["tokens"] == 18
+    assert s["fleet"]["replicas"] == 2
+    assert s["fleet"]["route"] == "rr"
+    assert s["fleet"]["routed_per_replica"] == [3, 3]
+    assert s["fleet"]["admitted_per_replica"] == [3, 3]
+    assert s["fleet"]["load_imbalance"] == 1.0
+    assert s["fleet"]["gossip_ticks"] == router.gossip_ticks > 0
+
+
+def test_fleet_bit_equal_to_single_replica_real_model(dense):
+    api, params = dense
+    cfg = _paged_cfg(batch=4, buckets=(16,), max_new_tokens=4,
+                     block_size=8, num_blocks=31)
+    prompts = _prompts(np.random.default_rng(4), 10, lo=3, hi=15)
+
+    single = ContinuousScheduler(api, params, cfg)
+    for p in prompts:
+        single.submit(p, max_new_tokens=4)
+    oracle = single.run()
+
+    for route in ("rr", "jsq"):
+        router = ReplicaRouter(api, params, cfg,
+                               FleetConfig(replicas=2, route=route))
+        rids = [router.submit(p, max_new_tokens=4) for p in prompts]
+        outs = router.run()
+        for gi, (rid, _) in enumerate(zip(rids, prompts)):
+            np.testing.assert_array_equal(outs[rid], oracle[gi],
+                                          err_msg=f"route={route} rid={rid}")
+
+
+# ---------------------------------------------------------------------------
+# metrics merge properties
+# ---------------------------------------------------------------------------
+
+def _fake_stream(events, k):
+    """Replay a list of (submit, queue_wait, prefill, decode_ticks) request
+    timelines into one combined ServeMetrics and K split parts
+    (round-robin), driving every instance off the same fake clock."""
+    clock = lambda: _fake_stream.now                   # noqa: E731
+    combined = ServeMetrics(clock=clock)
+    parts = [ServeMetrics(clock=clock) for _ in range(k)]
+    rid_maps = [dict() for _ in range(k)]
+    locals_ = [0] * k
+    for rid, (t0, qw, pf, dec) in enumerate(events):
+        i = rid % k
+        local = locals_[i]
+        locals_[i] += 1
+        rid_maps[i][local] = rid
+        for m, r in ((combined, rid), (parts[i], local)):
+            _fake_stream.now = float(t0)
+            m.record_submit(r, prompt_len=5, priority=rid % 2)
+            _fake_stream.now = float(t0 + qw)
+            m.record_admit(r)
+            _fake_stream.now = float(t0 + qw + pf)
+            m.record_token(r)
+            for d in range(dec):
+                _fake_stream.now = float(t0 + qw + pf + 1 + d)
+                m.record_token(r)
+            m.record_finish(r)
+    return combined, parts, rid_maps
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=24),
+       st.integers(1, 5))
+def test_merge_summaries_equals_combined_stream(starts, k):
+    rng = np.random.default_rng(len(starts) * 31 + k)
+    events = [(t0, int(rng.integers(0, 9)), int(rng.integers(1, 4)),
+               int(rng.integers(0, 6))) for t0 in starts]
+    combined, parts, rid_maps = _fake_stream(events, k)
+    merged = merge_summaries(parts, rid_maps=rid_maps)
+    fleet = merged.pop("fleet")
+    assert merged == combined.summary()
+    assert fleet["replicas"] == k
+    assert sum(fleet["admitted_per_replica"]) == len(events)
+    m = merge_metrics(parts, rid_maps=rid_maps)
+    assert set(m.requests) == set(range(len(events)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 40), min_size=1, max_size=16))
+def test_ttft_decomposes_into_queue_wait_plus_admitted_ttft(starts):
+    rng = np.random.default_rng(sum(starts) + len(starts))
+    events = [(t0, int(rng.integers(0, 7)), int(rng.integers(1, 5)),
+               int(rng.integers(0, 3))) for t0 in starts]
+    combined, _, _ = _fake_stream(events, 1)
+    for r in combined.requests.values():
+        ttft = r.first_token - r.submit
+        qwait = r.admit - r.submit
+        attft = r.first_token - r.admit
+        assert ttft == pytest.approx(qwait + attft)
+    s = combined.summary()
+    # the decomposition holds for the extreme percentiles too: every
+    # component is non-negative, so p99 ttft is bounded by the sum
+    assert s["p99_ttft_s"] <= s["p99_queue_wait_s"] + s["p99_ttft_admit_s"]
+
+
+def test_summary_percentile_keys_stable():
+    expected = {f"p{q}_{w}_s" for q in (50, 99)
+                for w in ("latency", "ttft", "queue_wait", "ttft_admit")}
+    empty = ServeMetrics().summary()
+    combined, parts, rid_maps = _fake_stream([(0, 1, 1, 2), (3, 0, 2, 1)], 2)
+    merged = merge_summaries(parts, rid_maps=rid_maps)
+    for s in (empty, combined.summary(), merged):
+        assert expected <= set(s)
+        for p, q in (("p50", "p99"),):
+            for w in ("latency", "ttft", "queue_wait", "ttft_admit"):
+                assert s[f"{p}_{w}_s"] <= s[f"{q}_{w}_s"]
+
+
+def test_merge_rid_collision_raises():
+    combined, parts, _ = _fake_stream([(0, 1, 1, 1), (2, 1, 1, 1)], 2)
+    with pytest.raises(ValueError, match="rid 0 appears"):
+        merge_metrics(parts)                  # both parts used local rid 0
+    assert merge_metrics([]).summary()["requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# store disk aging
+# ---------------------------------------------------------------------------
+
+WIDE = 10 * 30 * 60 * 1000    # 5h of hourly folds -> several segments
+
+
+def _aged_store(cols, n_writes=6):
+    store = _write(Store(StoreConfig(max_len=64)), cols, n_writes)
+    for q in (25, 50, 75):
+        store.compact(int(np.percentile(cols[2], q)))
+    store.compact()
+    return store
+
+
+def test_evict_to_disk_scan_transparent(tmp_path):
+    cols = _events(600, seed=33, ts_hi=WIDE)
+    store = _aged_store(cols)
+    before = store.scan()
+    n_sessions = sum(1 for g in store.segments if g.kind == "sessions")
+    assert n_sessions >= 3
+    n = store.evict_to_disk(1, path=str(tmp_path))
+    assert n == n_sessions - 1 == store.segments_evicted
+    assert sum(1 for g in store.segments if g.on_disk) == n
+    assert all(g.blob == b"" and g.disk_bytes > 0
+               for g in store.segments if g.on_disk)
+    after = store.scan()
+    assert after.stats.segments_on_disk == n
+    assert after.stats.segments_reloaded == n          # full scan: all back
+    np.testing.assert_array_equal(after.sequences.symbols,
+                                  before.sequences.symbols)
+    np.testing.assert_array_equal(after.sequences.user_id,
+                                  before.sequences.user_id)
+    # reloads are transient: the store itself still holds only the cap
+    assert sum(1 for g in store.segments if g.on_disk) == n
+    assert store.segments_reloaded == n
+    s = store.summary()
+    assert s["segments_on_disk"] == n and s["segments_evicted"] == n
+
+
+def test_evict_pruned_scan_skips_disk_reads(tmp_path):
+    cols = _events(800, seed=34, ts_hi=WIDE)
+    store = _aged_store(cols)
+    store.evict_to_disk(0, path=str(tmp_path))         # everything on disk
+    lo = int(np.percentile(cols[2], 45))
+    hi = int(np.percentile(cols[2], 55))
+    narrow = store.scan(time_range=(lo, hi))
+    full = store.scan()
+    # metadata pruning happens before any disk read: a windowed scan
+    # reloads strictly fewer evicted segments than the full scan
+    assert narrow.stats.segments_reloaded < full.stats.segments_reloaded
+    assert narrow.stats.segments_on_disk == full.stats.segments_on_disk
+
+
+def test_evict_cap_is_sticky_across_compactions(tmp_path):
+    cols = _events(500, seed=35, ts_hi=WIDE)
+    t = cols[2]
+    mid = t < np.percentile(t, 50)
+    early = tuple(a[mid] for a in cols)
+    late = tuple(a[~mid] for a in cols)
+    store = _write(Store(StoreConfig(max_len=64)), early, 3)
+    store.compact()
+    store.evict_to_disk(1, path=str(tmp_path))
+    u, s_, ts, c, ip = late
+    store.append_events(u, s_, ts, c, ip)
+    store.compact()                                    # new segments fold in
+    resident = [g for g in store.segments
+                if g.kind == "sessions" and not g.on_disk]
+    assert len(resident) <= 1, "sticky cap ignored by later compaction"
+
+
+def test_evict_save_load_round_trip(tmp_path):
+    cols = _events(400, seed=36, ts_hi=WIDE)
+    store = _aged_store(cols)
+    want = store.scan().sequences
+    store.evict_to_disk(0, path=str(tmp_path / "spill"))
+    store.save(str(tmp_path / "saved"))                # materializes blobs
+    loaded = Store.load(str(tmp_path / "saved"))
+    assert not any(g.on_disk for g in loaded.segments)
+    got = loaded.scan().sequences
+    np.testing.assert_array_equal(got.symbols, want.symbols)
+    np.testing.assert_array_equal(got.user_id, want.user_id)
+
+
+def test_evict_validation(tmp_path):
+    store = Store(StoreConfig(max_len=64))
+    with pytest.raises(ValueError, match=">= 0"):
+        store.evict_to_disk(-1, path=str(tmp_path))
+    with pytest.raises(ValueError):
+        store.evict_to_disk(1)                         # no spill dir yet
+
+
+# ---------------------------------------------------------------------------
+# Server scheduler-cache LRU cap
+# ---------------------------------------------------------------------------
+
+def test_scheduler_cache_lru_evicts_loudly():
+    api = _stub_api(EOS_AFTER)
+    srv = Server(api, {}, ServeConfig(max_new_tokens=3, max_schedulers=2))
+    rng = np.random.default_rng(5)
+
+    def gen(b, width):
+        prompts = rng.integers(4, VOCAB, (b, width)).astype(np.int32)
+        return prompts, srv.generate(prompts)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")                 # no warning yet
+        gen(1, 5)
+        gen(2, 5)
+    assert len(srv._schedulers) == 2 and srv.scheduler_evictions == 0
+    with pytest.warns(RuntimeWarning, match=r"\(batch, bucket\)=\(1, 8\)"):
+        gen(3, 5)                                      # evicts the coldest
+    assert len(srv._schedulers) == 2 and srv.scheduler_evictions == 1
+    assert (1, 8) not in srv._schedulers
+    # the evicted shape still serves correctly (recompiled, another evict)
+    with pytest.warns(RuntimeWarning):
+        p, out = gen(1, 6)
+    np.testing.assert_array_equal(
+        out[0], np.pad(_stub_expected(p[0], 3, EOS_AFTER), (0, 0)))
+    assert srv.scheduler_evictions == 2
+    # LRU order, not insertion order: touching a shape protects it
+    srv2 = Server(api, {}, ServeConfig(max_new_tokens=3, max_schedulers=2))
+    srv2.generate(rng.integers(4, VOCAB, (1, 5)).astype(np.int32))
+    srv2.generate(rng.integers(4, VOCAB, (2, 5)).astype(np.int32))
+    srv2.generate(rng.integers(4, VOCAB, (1, 5)).astype(np.int32))  # touch
+    with pytest.warns(RuntimeWarning, match=r"=\(2, 8\)"):
+        srv2.generate(rng.integers(4, VOCAB, (3, 5)).astype(np.int32))
+    assert (1, 8) in srv2._schedulers and (2, 8) not in srv2._schedulers
